@@ -1,0 +1,56 @@
+"""§II-D: instrumentation overhead must stay below 1% when the sampler
+runs on a dedicated thread."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.tracing import LiveSampler, RegionTracer
+
+
+def workload(n=10):
+    # chunky kernels: the sampler thread contends only at dispatch points,
+    # mirroring a reserved-core deployment (paper §II-D)
+    x = jnp.ones((1024, 1024))
+    f = jax.jit(lambda a: a @ a / jnp.linalg.norm(a))
+    f(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        x = f(x)
+    x.block_until_ready()
+    return time.perf_counter() - t0
+
+
+def run():
+    base = min(workload() for _ in range(4))
+    tracer = RegionTracer()
+    sampler = LiveSampler(lambda t: 215.0, interval_s=1e-3).start()
+    t_instr = []
+    for _ in range(4):
+        with tracer.region("w"):
+            t_instr.append(workload())
+    t_read, vals = sampler.stop()
+    instr = min(t_instr)
+    overhead = instr / base - 1.0
+    return {"base_s": base, "instr_s": instr, "overhead": overhead,
+            "n_samples": len(t_read),
+            "sample_interval_ms": float(np.median(np.diff(t_read))) * 1e3
+            if len(t_read) > 2 else float("nan")}
+
+
+def main():
+    out, us = timed(run)
+    print("# §II-D — instrumentation overhead (dedicated sampler thread)")
+    print(f"  baseline {out['base_s']*1e3:.1f} ms, instrumented "
+          f"{out['instr_s']*1e3:.1f} ms -> overhead "
+          f"{out['overhead']*100:.2f}% "
+          f"({out['n_samples']} samples @ "
+          f"{out['sample_interval_ms']:.2f} ms)")
+    derived = f"overhead={out['overhead']*100:.2f}% (paper: <1%)"
+    return us, derived
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Roofline table from the dry-run records (deliverable g).
+
+Reads results/dryrun/*.json and emits the per-(arch x shape x mesh) table:
+compute / memory / collective terms in seconds, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS usefulness ratio, and bytes/device."""
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import timed
+
+RESULTS = Path(__file__).parent.parent / "results" / "dryrun"
+
+
+def load(mesh="16x16"):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{mesh}.json"))):
+        rows.append(json.loads(Path(f).read_text()))
+    return rows
+
+
+def table(mesh="16x16"):
+    rows = load(mesh)
+    out = []
+    for r in rows:
+        if r["status"] != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": r["status"],
+                        "reason": r.get("reason", r.get("error", ""))[:60]})
+            continue
+        t = r["roofline"]
+        dom = r["bottleneck"]
+        frac = t[dom] / max(sum(t.values()), 1e-30)
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "bottleneck": dom,
+            "useful_ratio": r["useful_flops_ratio"],
+            "mem_gb": r["memory"]["per_device_total"] / 1e9,
+            "roofline_frac": r["roofline"]["compute_s"]
+            / max(max(t.values()), 1e-30),
+        })
+    return out
+
+
+def main():
+    rows, us = timed(table)
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"# Roofline (16x16 mesh): {len(ok)} cells")
+    print(f"  {'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+          f" {'collect_s':>10s} {'bottleneck':>12s} {'useful':>7s}"
+          f" {'GB/dev':>7s}")
+    for r in ok:
+        print(f"  {r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['bottleneck']:>12s} {r['useful_ratio']:7.3f} "
+              f"{r['mem_gb']:7.1f}")
+    n_compute = sum(1 for r in ok if r["bottleneck"] == "compute_s")
+    derived = (f"cells={len(ok)},compute_bound={n_compute},"
+               f"median_useful={sorted(r['useful_ratio'] for r in ok)[len(ok)//2]:.2f}"
+               if ok else "no dryrun records")
+    return us, derived
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV after each bench's own report.
+"""
+import sys
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+BENCHES = [
+    "bench_update_intervals",   # Fig. 4
+    "bench_step_response",      # Fig. 5
+    "bench_aliasing",           # Fig. 6
+    "bench_fft_aliasing",       # Fig. 10
+    "bench_reconstruction",     # §III-A2 + fastotf2 throughput
+    "bench_hpl",                # Fig. 7 + energy table
+    "bench_hpg",                # Fig. 8
+    "bench_overhead",           # §II-D <1% overhead
+    "roofline",                 # §Roofline table from the dry-run
+]
+
+
+def main() -> None:
+    csv = ["name,us_per_call,derived"]
+    failures = 0
+    for name in BENCHES:
+        print(f"\n{'='*72}\n== benchmarks.{name}\n{'='*72}")
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            us, derived = mod.main()
+            csv.append(f"{name},{us:.0f},{derived}")
+        except Exception:
+            traceback.print_exc()
+            csv.append(f"{name},-1,FAILED")
+            failures += 1
+    print("\n" + "\n".join(csv))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: the paper's methodology in 60 lines.
+
+Square-wave workload -> three-stage sensor fabric -> blind characterization
+-> ΔE/Δt reconstruction vs the firmware-averaged power counter.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (NodeFabric, ToolSpec, characterize_sensor,
+                        delta_e_over_delta_t, power_trace_series,
+                        square_wave)
+
+# 1 s idle / 1 s active square wave (paper Fig. 5), 4 chips per node
+truth = square_wave(period_s=2.0, n_cycles=5, lead_s=2.0, tail_s=2.0)
+fabric = NodeFabric(chip_truths=[truth] * 4)
+traces = fabric.sample_all(ToolSpec(sample_interval_s=1e-3), seed=0)
+
+edges_up = truth.times[1:-1:2]
+edges_down = truth.times[2:-1:2]
+
+print("== sensor characterization (blind, from observations only) ==")
+for name in ["chip0_energy", "chip0_power_avg", "chip0_power_inst",
+             "pm_accel0_power"]:
+    rec = characterize_sensor(traces[name], edges_up, edges_down)
+    sr = rec["step_response"]
+    ui = rec["update_intervals"]["observed"]
+    print(f"{name:20s} observed-interval={ui['median']*1e3:6.2f} ms  "
+          f"delay={sr['delay_s']*1e3:7.1f} ms  rise={sr['rise_s']*1e3:7.1f} ms"
+          f"  fall={sr['fall_s']*1e3:7.1f} ms")
+
+print("\n== ΔE/Δt beats the averaged power counter ==")
+derived = delta_e_over_delta_t(traces["chip0_energy"])
+averaged = power_trace_series(traces["chip0_power_avg"])
+active = (derived.t > 4.2) & (derived.t < 4.9)      # inside an active phase
+active_avg = (averaged.t > 4.2) & (averaged.t < 4.9)
+print(f"truth active power:        215.0 W")
+print(f"ΔE/Δt steady estimate:     {np.mean(derived.watts[active]):7.1f} W")
+print(f"averaged-counter estimate: {np.mean(averaged.watts[active_avg]):7.1f} W"
+      f"   <- smoothed by the undocumented firmware filter")

@@ -1,0 +1,102 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json and the §Perf table from results/perf/*.json."""
+import glob
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).parent.parent
+
+
+def load(pattern):
+    return [json.loads(Path(f).read_text())
+            for f in sorted(glob.glob(str(ROOT / pattern)))]
+
+
+def dryrun_section():
+    rows = load("results/dryrun/*.json")
+    ok = [r for r in rows if r["status"] == "ok"]
+    sk = [r for r in rows if r["status"] == "skipped"]
+    er = [r for r in rows if r["status"] == "error"]
+    out = [f"**{len(ok)} cells lowered+compiled OK, {len(sk)} documented "
+           f"skips, {len(er)} errors** (of {len(rows)} = 10 archs x 4 "
+           "shapes x 2 meshes).", ""]
+    out.append("| arch | shape | mesh | kind | GB/device | compile_s | "
+               "collectives (GB/dev/step) |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in ok:
+        coll = ", ".join(f"{k.replace('all-','a')}:{v/1e9:.1f}"
+                         for k, v in sorted(
+                             r["collectives"].items(),
+                             key=lambda kv: -kv[1])[:3])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+            f"{r['memory']['per_device_total']/1e9:.1f} | "
+            f"{r['compile_s']:.0f} | {coll} |")
+    out.append("")
+    out.append("Skipped cells (sub-quadratic gate, DESIGN.md "
+               "§Arch-applicability):")
+    for r in sk:
+        out.append(f"* {r['arch']} x {r['shape']} ({r['mesh']})")
+    return "\n".join(out)
+
+
+def roofline_section():
+    rows = [r for r in load("results/dryrun/*16x16.json")
+            if r["status"] == "ok" and r["mesh"] == "16x16"]
+    out = ["| arch | shape | compute_s | memory_s | collective_s | "
+           "bottleneck | MODEL/HLO flops | roofline frac |"]
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        t = r["roofline"]
+        dom = max(t.values())
+        frac = t["compute_s"] / max(dom, 1e-30)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{r['bottleneck'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.3f} | {frac:.3f} |")
+    return "\n".join(out)
+
+
+def perf_section():
+    rows = load("results/perf/*.json")
+    by_cell = {}
+    for r in rows:
+        by_cell.setdefault((r["arch"], r["shape"]), []).append(r)
+    out = []
+    for (arch, shape), recs in by_cell.items():
+        out.append(f"\n#### {arch} x {shape}\n")
+        out.append("| variant | compute_s | memory_s | collective_s | "
+                   "GB/dev | useful | dominant-term delta |")
+        out.append("|---|---|---|---|---|---|---|")
+        base = next((r for r in recs if r["variant"] == "baseline"), None)
+        for r in recs:
+            if r.get("status") != "ok":
+                out.append(f"| {r['variant']} | ERROR | | | | | |")
+                continue
+            t = r["roofline"]
+            delta = ""
+            if base and r is not base and base.get("status") == "ok":
+                dom = base["bottleneck"]
+                delta = (f"{dom.replace('_s','')} x"
+                         f"{t[dom]/max(base['roofline'][dom],1e-12):.2f}")
+            out.append(
+                f"| {r['variant']} | {t['compute_s']:.3f} | "
+                f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+                f"{r['memory']['per_device_total']/1e9:.1f} | "
+                f"{r['useful_flops_ratio']:.3f} | {delta} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("<!-- §Dry-run -->")
+        print(dryrun_section())
+    if which in ("all", "roofline"):
+        print("\n<!-- §Roofline -->")
+        print(roofline_section())
+    if which in ("all", "perf"):
+        print("\n<!-- §Perf -->")
+        print(perf_section())

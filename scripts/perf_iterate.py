@@ -1,0 +1,109 @@
+"""§Perf hillclimbing driver: re-lower chosen cells under optimization
+knobs (env-controlled) and record the roofline deltas.
+
+Each variant runs in a fresh subprocess (XLA device-count flags + knob env),
+writing results/perf/<arch>__<shape>__<variant>.json.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).parent.parent
+OUT = ROOT / "results" / "perf"
+
+CELLS = {
+    # (arch, shape): [(variant_name, env_overrides)]
+    ("llama3.2-3b", "train_4k"): [
+        ("baseline", {}),
+        ("gather_bf16", {"REPRO_GATHER_BF16": "1"}),
+        ("grad_bf16", {"REPRO_GRAD_COMPRESS": "bf16"}),
+        ("gather+grad_bf16", {"REPRO_GATHER_BF16": "1",
+                              "REPRO_GRAD_COMPRESS": "bf16"}),
+        ("attn_pin", {"REPRO_ATTN_HEAD_CONSTRAINT": "1"}),
+        ("attn_pin+dots", {"REPRO_ATTN_HEAD_CONSTRAINT": "1",
+                           "REPRO_REMAT_POLICY": "dots"}),
+    ],
+    ("qwen1.5-32b", "decode_32k"): [
+        ("baseline", {}),
+        ("kv_f8", {"REPRO_KV_DTYPE": "float8_e4m3fn"}),
+    ],
+    ("qwen3-moe-235b-a22b", "train_4k"): [
+        ("baseline", {}),
+        ("gather_bf16", {"REPRO_GATHER_BF16": "1"}),
+        ("gather+grad_bf16", {"REPRO_GATHER_BF16": "1",
+                              "REPRO_GRAD_COMPRESS": "bf16"}),
+        ("attn_pin", {"REPRO_ATTN_HEAD_CONSTRAINT": "1"}),
+        ("dots_remat", {"REPRO_REMAT_POLICY": "dots"}),
+    ],
+}
+
+SNIPPET = """
+import json, sys
+from repro.launch.dryrun import lower_cell
+rec, compiled = lower_cell({arch!r}, {shape!r}, multi_pod=False)
+rec.pop("traceback", None)
+print("::REC::" + json.dumps(rec))
+"""
+
+
+def run_variant(arch, shape, variant, env_over):
+    OUT.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape}__{variant.replace('+', '_')}"
+    path = OUT / f"{tag}.json"
+    if path.exists():
+        return json.loads(path.read_text())
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.update(env_over)
+    code = textwrap.dedent(SNIPPET.format(arch=arch, shape=shape))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=2400)
+    rec = None
+    for line in r.stdout.splitlines():
+        if line.startswith("::REC::"):
+            rec = json.loads(line[len("::REC::"):])
+    if rec is None:
+        rec = {"status": "error", "stderr": r.stderr[-2000:]}
+    rec["variant"] = variant
+    rec["env"] = env_over
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def fmt(rec):
+    if rec.get("status") != "ok":
+        return f"ERROR {rec.get('stderr', '')[:200]}"
+    t = rec["roofline"]
+    return (f"compute={t['compute_s']:.3f}s mem={t['memory_s']:.3f}s "
+            f"coll={t['collective_s']:.3f}s GB/dev="
+            f"{rec['memory']['per_device_total']/1e9:.1f} "
+            f"useful={rec['useful_flops_ratio']:.3f} "
+            f"-> {rec['bottleneck']}")
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for (arch, shape), variants in CELLS.items():
+        if only and only not in arch:
+            continue
+        print(f"\n### {arch} x {shape}")
+        base = None
+        for variant, env_over in variants:
+            rec = run_variant(arch, shape, variant, env_over)
+            line = fmt(rec)
+            if rec.get("status") == "ok":
+                if base is None:
+                    base = rec
+                else:
+                    dom = base["bottleneck"]
+                    d0 = base["roofline"][dom]
+                    d1 = rec["roofline"][dom]
+                    line += f"   [{dom} x{d1/max(d0,1e-12):.2f} vs base]"
+            print(f"  {variant:20s} {line}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

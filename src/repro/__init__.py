@@ -1,0 +1,7 @@
+"""repro: fine-grained power/energy attribution for TPU-pod-scale JAX training.
+
+Reproduction of "Fine-Grained Power and Energy Attribution on AMD GPU/APU-Based
+Exascale Nodes" (CS.DC 2026), adapted to TPU v5e pods.  See DESIGN.md.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,44 @@
+"""The paper's primary contribution: fine-grained power/energy attribution.
+
+Submodules:
+  measurement_model — three-stage async sensor pipeline (Fig. 1) + presets
+  power_model       — ground-truth power processes (square wave, roofline)
+  sensors           — sensor-fabric simulator (production/publish/sample)
+  reconstruction    — dE/dt instantaneous power (par. III-A2)
+  characterization  — blind update-interval/delay/rise/fall estimation (V-A)
+  confidence        — W_conf windows (Eq. 1) + steady-state attribution
+  aliasing          — transition-detection error + FFT folding (Fig. 6/10)
+  calibration       — NIC-rail offsets + PM upstream slope (App. B)
+  tracing           — Score-P-analogue region tracer + async sampler
+  trace_format      — columnar trace store (OTF2/fastotf2 analogue)
+  attribution       — phase-level energy integration + savings decomposition
+"""
+from repro.core.measurement_model import (SensorSpec, ToolSpec,  # noqa: F401
+                                          default_node_sensors,
+                                          expected_lag_s)
+from repro.core.power_model import (PiecewisePower, occupancy_power,  # noqa
+                                    phase_power, square_wave)
+from repro.core.sensors import NodeFabric, SensorTrace, simulate_sensor  # noqa
+from repro.core.reconstruction import (PowerSeries,  # noqa: F401
+                                       delta_e_over_delta_t,
+                                       power_trace_series, unwrap_counter)
+from repro.core.characterization import (characterize_sensor,  # noqa: F401
+                                         step_response, update_intervals)
+from repro.core.confidence import (confidence_window,  # noqa: F401
+                                   min_attributable_phase_s, steady_state)
+from repro.core.aliasing import (aliasing_sweep, fft_analysis,  # noqa: F401
+                                 nyquist_limit_hz,
+                                 transition_detection_error)
+from repro.core.calibration import (Corrections,  # noqa: F401
+                                    apply_corrections,
+                                    estimate_static_offsets,
+                                    estimate_upstream_slope,
+                                    nic_rail_corrections)
+from repro.core.tracing import LiveSampler, RegionTracer  # noqa: F401
+from repro.core.trace_format import (load_trace, merge_traces,  # noqa: F401
+                                     save_trace)
+from repro.core.attribution import (PhaseEnergy, attribute_energy,  # noqa
+                                    attribute_power_series,
+                                    energy_conservation_residual,
+                                    split_energy_savings,
+                                    stacked_node_power)

@@ -1,0 +1,126 @@
+"""Region tracing — the Score-P analogue (§II-D).
+
+``RegionTracer`` records host-timestamped, nested application regions in a
+unified timebase (``time.perf_counter_ns``), cheap enough to wrap every
+training phase (<1% overhead, measured by benchmarks/bench_overhead.py).
+``LiveSampler`` is the APAPI analogue: a dedicated thread polling sensors
+asynchronously so instrumentation never blocks application threads.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RegionEvent:
+    name: str
+    t_start: float       # seconds, unified timebase
+    t_end: float
+    depth: int
+    device: int = -1     # -1 = host region
+    step: int = -1
+
+
+class RegionTracer:
+    """Nested region recording with a unified monotonic timebase."""
+
+    def __init__(self, timebase: Optional[Callable[[], float]] = None):
+        self._now = timebase or (lambda: time.perf_counter_ns() * 1e-9)
+        self.events: list = []
+        self._stack: list = []
+        self.t0 = self._now()
+
+    def now(self) -> float:
+        return self._now() - self.t0
+
+    @contextlib.contextmanager
+    def region(self, name: str, *, device: int = -1, step: int = -1):
+        t_s = self.now()
+        self._stack.append(name)
+        try:
+            yield
+        finally:
+            depth = len(self._stack) - 1
+            self._stack.pop()
+            self.events.append(
+                RegionEvent(name, t_s, self.now(), depth, device, step))
+
+    def add_region(self, name, t_start, t_end, *, depth=0, device=-1,
+                   step=-1):
+        """Record an externally-timed region (e.g. replayed traces)."""
+        self.events.append(
+            RegionEvent(name, t_start, t_end, depth, device, step))
+
+    def phases(self, *, depth: Optional[int] = None, name=None):
+        """(name, t_start, t_end) tuples, sorted by start time."""
+        evs = self.events
+        if depth is not None:
+            evs = [e for e in evs if e.depth == depth]
+        if name is not None:
+            evs = [e for e in evs if e.name == name]
+        return sorted(((e.name, e.t_start, e.t_end) for e in evs),
+                      key=lambda x: x[1])
+
+    def to_arrays(self):
+        names = sorted({e.name for e in self.events})
+        name_id = {n: i for i, n in enumerate(names)}
+        ev = sorted(self.events, key=lambda e: e.t_start)
+        return {
+            "names": names,
+            "name_id": np.asarray([name_id[e.name] for e in ev], np.int32),
+            "t_start": np.asarray([e.t_start for e in ev], np.float64),
+            "t_end": np.asarray([e.t_end for e in ev], np.float64),
+            "depth": np.asarray([e.depth for e in ev], np.int32),
+            "device": np.asarray([e.device for e in ev], np.int32),
+            "step": np.asarray([e.step for e in ev], np.int32),
+        }
+
+
+class LiveSampler:
+    """Dedicated sampling thread (APAPI analogue): polls ``read_fn`` at a
+    requested cadence, recording (t_read, value) without touching the
+    application thread.  Used by bench_overhead.py to validate the <1%
+    instrumentation-overhead claim."""
+
+    def __init__(self, read_fn: Callable[[float], float],
+                 interval_s: float = 1e-3,
+                 timebase: Optional[Callable[[], float]] = None):
+        self._read = read_fn
+        self._interval = interval_s
+        self._now = timebase or (lambda: time.perf_counter_ns() * 1e-9)
+        self._stop = threading.Event()
+        self._thread = None
+        self.t_read: list = []
+        self.values: list = []
+
+    def start(self):
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self):
+        nxt = self._now()
+        while not self._stop.is_set():
+            t = self._now()
+            self.t_read.append(t)
+            self.values.append(self._read(t))
+            nxt += self._interval
+            delay = nxt - self._now()
+            if delay > 0:
+                self._stop.wait(delay)
+            else:
+                nxt = self._now()     # fell behind: resync (observed gap)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+        return (np.asarray(self.t_read, np.float64),
+                np.asarray(self.values, np.float64))

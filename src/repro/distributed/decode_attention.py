@@ -1,0 +1,105 @@
+"""Distributed flash-decode: online-softmax attention over a seq-sharded
+KV cache.
+
+Decode caches shard their SEQUENCE dim on "model" (DESIGN.md §4).  GSPMD
+would all-gather the cache per layer (GBs per step); instead this shard_map
+computes per-shard partial attention and combines with the standard
+online-softmax (m, l, num) reduction — only (B, H, head_dim)-sized tensors
+cross shards.  This is the TPU-native analogue of FlashDecoding's split-K.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def _partial_attend(q, k, v, valid):
+    """q: (B,Hq,D); k/v: (B,Sl,Hkv,D); valid: (B,Sl) ->
+    (num (B,Hq,D), m (B,Hq), l (B,Hq))."""
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    m = jnp.max(scores, axis=-1)                       # (B,Hkv,g)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    num = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return (num.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
+
+
+def decode_attention(q, ck, cv, pos, mesh, *, window=0, logit_cap=0.0,
+                     seq_axis="model", dp_axes=("pod", "data")):
+    """q: (B,1,Hq,D); ck/cv: (B,Smax,Hkv,D) seq-sharded on `seq_axis`;
+    pos: scalar — current write position (entries <= pos are valid).
+
+    Note: logit softcap is applied per-score before max/sum, matching the
+    jnp oracle (tanh is monotonic so the online combine stays exact).
+    """
+    b, smax = ck.shape[0], ck.shape[1]
+    n_shards = mesh.shape[seq_axis] if mesh is not None else 1
+    dp = tuple(a for a in dp_axes if mesh is not None
+               and a in mesh.axis_names)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    bspec = dp if (dp and b % dp_n == 0) else None
+    seq_ok = mesh is not None and smax % n_shards == 0 and n_shards > 1
+
+    def fn(qq, k, v, pos):
+        # dequantize (e.g. f8 caches) INSIDE the shard so only the local
+        # (B, S/shards) slice ever materializes at compute dtype
+        k = k.astype(qq.dtype)
+        v = v.astype(qq.dtype)
+        s_loc = k.shape[1]
+        base = lax.axis_index(seq_axis) * s_loc if seq_ok else 0
+        slots = base + jnp.arange(s_loc)
+        valid = slots <= pos
+        if window:
+            valid &= slots > pos - window
+        valid = jnp.broadcast_to(valid, (k.shape[0], s_loc))
+        q3 = qq[:, 0]
+        if logit_cap:
+            # softcap folds into scores; recompute partials with capping
+            bq, hq, d = q3.shape
+            hkv = k.shape[2]
+            g = hq // hkv
+            qf = q3.reshape(bq, hkv, g, d).astype(jnp.float32)
+            scores = jnp.einsum("bhgd,bshd->bhgs", qf,
+                                k.astype(jnp.float32))
+            scores = scores / jnp.sqrt(d).astype(jnp.float32)
+            scores = logit_cap * jnp.tanh(scores / logit_cap)
+            scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+            m = jnp.max(scores, axis=-1)
+            p = jnp.where(valid[:, None, None, :],
+                          jnp.exp(scores - m[..., None]), 0.0)
+            l = jnp.sum(p, axis=-1)
+            num = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+            num, m, l = (num.reshape(bq, hq, d), m.reshape(bq, hq),
+                         l.reshape(bq, hq))
+        else:
+            num, m, l = _partial_attend(q3, k, v, valid)
+        if seq_ok and n_shards > 1:
+            m_g = lax.pmax(m, seq_axis)
+            scale = jnp.exp(m - m_g)
+            num = lax.psum(num * scale[..., None], seq_axis)
+            l = lax.psum(l * scale, seq_axis)
+        out = num / jnp.maximum(l[..., None], 1e-30)
+        return out[:, None].astype(qq.dtype)
+
+    if not seq_ok:
+        # single-shard fallback (smoke tests / non-divisible caches)
+        return fn(q, ck, cv, pos)
+
+    kv_spec = P(bspec, seq_axis)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec), kv_spec, kv_spec, P()),
+        out_specs=P(bspec),
+        check_vma=False,
+    )(q, ck, cv, pos)

@@ -1,0 +1,3 @@
+from repro.hpl.hpl import hpl_solve, make_system  # noqa: F401
+from repro.hpl.hpl_mxp import hpl_mxp_solve, make_dd_system  # noqa: F401
+from repro.hpl.hpg_mxp import hpg_solve, make_poisson  # noqa: F401

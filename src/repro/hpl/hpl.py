@@ -1,0 +1,143 @@
+"""rocHPL analogue: blocked LU with partial pivoting, FP32 ("full
+precision" on TPU — no fp64 MXU path; DESIGN.md §6 assumption change).
+
+Right-looking blocked factorization with the classic HPL phase structure —
+panel factorization, row swaps, triangular solve, trailing-matrix GEMM —
+each annotatable as an attribution region.  The trailing GEMM dominates
+FLOPs exactly as on Frontier, which is what makes HPL the paper's
+compute-bound case study.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def make_system(n, seed=0, dtype=jnp.float32):
+    key = jax.random.key(seed)
+    a = jax.random.uniform(key, (n, n), jnp.float32, -0.5, 0.5)
+    x_true = jnp.ones((n,), jnp.float32)
+    b = a @ x_true
+    return a.astype(dtype), b.astype(dtype), x_true
+
+
+def _panel_lu(panel, m_valid):
+    """Unblocked LU with partial pivoting on a (m, nb) panel whose first
+    ``m_valid`` rows are live (the rest are rolled-in, already-factored
+    rows that must not participate).  Returns (panel_factored, pivots)."""
+    m, nb = panel.shape
+    rows = jnp.arange(m)
+
+    def col_step(j, carry):
+        p, piv = carry
+        col = jnp.abs(p[:, j])
+        mask = (rows >= j) & (rows < m_valid)
+        col = jnp.where(mask, col, -jnp.inf)
+        r = jnp.argmax(col)
+        piv = piv.at[j].set(r)
+        # swap rows j <-> r
+        rj, rr = p[j], p[r]
+        p = p.at[j].set(rr).at[r].set(rj)
+        pivot = p[j, j]
+        scale = jnp.where(jnp.abs(pivot) > 1e-30, 1.0 / pivot, 0.0)
+        live = (rows > j) & (rows < m_valid)
+        l_col = jnp.where(live, p[:, j] * scale, p[:, j])
+        p = p.at[:, j].set(l_col)
+        below = live[:, None]
+        after = (jnp.arange(nb) > j)[None, :]
+        update = jnp.outer(jnp.where(live, l_col, 0.0), p[j])
+        p = jnp.where(below & after, p - update, p)
+        return p, piv
+
+    piv0 = jnp.zeros((nb,), jnp.int32)
+    return lax.fori_loop(0, nb, col_step, (panel, piv0))
+
+
+@functools.partial(jax.jit, static_argnames=("nb",))
+def lu_factor_blocked(a, *, nb=64):
+    """Blocked LU with partial pivoting.  a: (n, n) -> (lu, perm)."""
+    n = a.shape[0]
+    assert n % nb == 0
+    n_blocks = n // nb
+    perm = jnp.arange(n, dtype=jnp.int32)
+
+    def block_step(k, carry):
+        a, perm = carry
+        j0 = k * nb
+        # --- panel factorization (rows j0:, cols j0:j0+nb) -------------
+        # roll so the panel starts at row 0; rows beyond n-j0 are masked
+        panel = lax.dynamic_slice(a, (0, j0), (n, nb))
+        panel_s = jnp.roll(panel, -j0, axis=0)
+        _, piv = _panel_lu(panel_s, n - j0)
+        piv_global = piv + j0
+
+        # --- apply row swaps to the rest of the matrix ------------------
+        def apply_swap(j, state):
+            a, perm = state
+            r = piv_global[j] % n
+            jj = j0 + j
+            aj, ar = a[jj], a[r]
+            a = a.at[jj].set(ar).at[r].set(aj)
+            pj, pr = perm[jj], perm[r]
+            perm = perm.at[jj].set(pr).at[r].set(pj)
+            return a, perm
+
+        a, perm = lax.fori_loop(0, nb, apply_swap, (a, perm))
+        # re-factor the already-swapped panel (pivots are now identity)
+        panel2 = lax.dynamic_slice(a, (0, j0), (n, nb))
+        panel2_s = jnp.roll(panel2, -j0, axis=0)
+        panel2_f, _ = _panel_lu(panel2_s, n - j0)
+        panel2_f = jnp.roll(panel2_f, j0, axis=0)
+        a = lax.dynamic_update_slice(a, panel2_f, (0, j0))
+
+        # --- triangular solve for U12 + trailing GEMM -------------------
+        l11 = lax.dynamic_slice(a, (j0, j0), (nb, nb))
+        l11 = jnp.tril(l11, -1) + jnp.eye(nb, dtype=a.dtype)
+        a12 = lax.dynamic_slice(a, (j0, 0), (nb, n))
+        col_mask = jnp.arange(n) >= j0 + nb
+        u12 = jax.scipy.linalg.solve_triangular(
+            l11, a12, lower=True, unit_diagonal=True)
+        a12_new = jnp.where(col_mask[None, :], u12, a12)
+        a = lax.dynamic_update_slice(a, a12_new, (j0, 0))
+
+        l21 = lax.dynamic_slice(a, (0, j0), (n, nb))
+        row_mask = jnp.arange(n) >= j0 + nb
+        l21 = jnp.where(row_mask[:, None], l21, 0.0)
+        update = l21 @ a12_new                        # trailing GEMM
+        a = jnp.where(row_mask[:, None] & col_mask[None, :],
+                      a - update, a)
+        return a, perm
+
+    a, perm = lax.fori_loop(0, n_blocks, block_step, (a, perm))
+    return a, perm
+
+
+@jax.jit
+def lu_solve(lu, perm, b):
+    pb = b[perm]
+    low = jnp.tril(lu, -1) + jnp.eye(lu.shape[0], dtype=lu.dtype)
+    y = jax.scipy.linalg.solve_triangular(low, pb, lower=True,
+                                          unit_diagonal=True)
+    return jax.scipy.linalg.solve_triangular(jnp.triu(lu), y, lower=False)
+
+
+def hpl_solve(a, b, *, nb=64, tracer=None):
+    """Full HPL: factorize + solve + residual; returns (x, info)."""
+    from repro.core.tracing import RegionTracer
+    tracer = tracer or RegionTracer()
+    n = a.shape[0]
+    with tracer.region("hpl_factorize"):
+        lu, perm = lu_factor_blocked(a, nb=nb)
+        jax.block_until_ready(lu)
+    with tracer.region("hpl_solve"):
+        x = lu_solve(lu, perm, b)
+        jax.block_until_ready(x)
+    with tracer.region("hpl_verify"):
+        r = jnp.linalg.norm(a @ x - b) / (
+            jnp.linalg.norm(a) * jnp.linalg.norm(x) + 1e-30)
+        r = float(r)
+    flops = 2.0 / 3.0 * n ** 3
+    return x, {"residual": r, "flops": flops, "tracer": tracer}

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper), ref.py (pure-jnp oracle).  All validated in
+interpret=True mode on CPU; on TPU the same BlockSpecs drive MXU/VMEM.
+
+  squarewave        — calibrated FMA workload (the paper's §IV-B generator)
+  power_reconstruct — dE/dt + wraparound over (devices x samples) traces
+  phase_integrate   — segmented per-phase energy integration
+  flash_attention   — causal GQA flash attention (+gemma2 softcap)
+  ssm_scan          — selective-scan (mamba) inner recurrence
+"""

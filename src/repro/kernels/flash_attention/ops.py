@@ -1,0 +1,21 @@
+"""Public API: flash attention with GQA + softcap."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "logit_cap",
+                                             "interpret", "use_kernel"))
+def flash_attention(q, k, v, *, causal=True, logit_cap=0.0,
+                    interpret=False, use_kernel=True):
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D)."""
+    if use_kernel:
+        return flash_attention_kernel(q, k, v, causal=causal,
+                                      logit_cap=logit_cap,
+                                      interpret=interpret)
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    return flash_attention_ref(q, k, v, causal=causal, logit_cap=logit_cap)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for causal GQA attention with optional softcap."""
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, logit_cap=0.0):
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) / (d ** 0.5)
+    if logit_cap:
+        s_mat = logit_cap * jnp.tanh(s_mat / logit_cap)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        s_mat = jnp.where(mask, s_mat, -1e30)
+    p = jnp.exp(s_mat - jnp.max(s_mat, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.phase_integrate.ops import phase_energies  # noqa: F401

@@ -1,0 +1,18 @@
+"""Public API: per-phase energies for batched power streams."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.phase_integrate.kernel import phase_integrate_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def phase_energies(times, watts, phases, *, interpret: bool = False,
+                   use_kernel: bool = True):
+    if use_kernel:
+        return phase_integrate_kernel(times, watts, phases,
+                                      interpret=interpret)
+    from repro.kernels.phase_integrate.ref import phase_energies_ref
+    return phase_energies_ref(times, watts, phases)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for segmented phase-energy integration."""
+import jax.numpy as jnp
+
+
+def phase_energies_ref(times, watts, phases):
+    t_lo = jnp.concatenate([times[:, :1], times[:, :-1]], axis=1)
+    a = phases[:, 0][:, None, None]
+    b = phases[:, 1][:, None, None]
+    overlap = jnp.maximum(
+        jnp.minimum(times[None], b) - jnp.maximum(t_lo[None], a), 0.0)
+    return jnp.sum(overlap * watts[None], axis=-1).T

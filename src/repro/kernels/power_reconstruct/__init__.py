@@ -1,0 +1,1 @@
+from repro.kernels.power_reconstruct.ops import reconstruct_power  # noqa: F401

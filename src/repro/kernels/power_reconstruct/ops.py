@@ -1,0 +1,20 @@
+"""Public API: batched trace -> instantaneous power."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.power_reconstruct.kernel import power_reconstruct_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("wrap_period", "interpret",
+                                             "use_kernel"))
+def reconstruct_power(energy, times, *, wrap_period: float = 0.0,
+                      interpret: bool = False, use_kernel: bool = True):
+    if use_kernel:
+        return power_reconstruct_kernel(energy, times,
+                                        wrap_period=wrap_period,
+                                        interpret=interpret)
+    from repro.kernels.power_reconstruct.ref import reconstruct_power_ref
+    return reconstruct_power_ref(energy, times, wrap_period=wrap_period)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for batched ΔE/Δt reconstruction."""
+import jax.numpy as jnp
+
+
+def reconstruct_power_ref(energy, times, *, wrap_period: float = 0.0):
+    de = jnp.diff(energy, axis=1)
+    if wrap_period > 0:
+        de = jnp.where(de < -0.5 * wrap_period, de + wrap_period, de)
+    dt = jnp.maximum(jnp.diff(times, axis=1), 1e-12)
+    return jnp.pad(de / dt, ((0, 0), (1, 0)))

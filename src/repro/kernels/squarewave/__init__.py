@@ -1,0 +1,2 @@
+from repro.kernels.squarewave.ops import (calibrated_fma_count,  # noqa: F401
+                                          squarewave_load)

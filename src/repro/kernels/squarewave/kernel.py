@@ -1,0 +1,49 @@
+"""Square-wave load kernel (paper §IV-B), TPU-native.
+
+The paper calibrates a double-precision vector-FMA kernel so HBM data
+movement rate ~= compute rate, pinning the GPU at TDP.  TPU adaptation
+(DESIGN.md §6): fp32/bf16 FMA chains (no fp64 MXU path) with the chain
+length calibrated around the v5e machine balance
+(197e12 FLOP/s / 819e9 B/s ≈ 0.24 FLOP per byte-of-HBM per FLOP... i.e.
+~962 FLOPs per 4-byte element for balance).
+
+Each grid row streams a (block_rows, width) tile HBM->VMEM, runs the
+`fma_chain`-long dependent FMA chain elementwise in VREGs, and streams the
+result back — exercising HBM and the VPU simultaneously, like the original.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sw_kernel(x_ref, o_ref, *, fma_chain: int):
+    x = x_ref[...]
+    a = jnp.full_like(x, 1.000000119)     # keeps values bounded, non-const
+    b = x * 1e-6
+
+    def body(_, acc):
+        return acc * a + b
+
+    acc = jax.lax.fori_loop(0, fma_chain, body, x)
+    o_ref[...] = acc
+
+
+def squarewave_kernel(x, *, fma_chain: int, block_rows: int = 256,
+                      interpret: bool = False):
+    """x: (rows, width) -> same shape; 2*fma_chain FLOPs per element."""
+    rows, width = x.shape
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_sw_kernel, fma_chain=fma_chain),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, width), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

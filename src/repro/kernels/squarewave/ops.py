@@ -1,0 +1,34 @@
+"""Public API: calibrated square-wave load generation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.squarewave.kernel import squarewave_kernel
+
+V5E_PEAK_FLOPS = 197e12
+V5E_HBM_BW = 819e9
+
+
+def calibrated_fma_count(dtype=jnp.float32, balance_factor=1.0) -> int:
+    """FMA-chain length so FLOPs/byte ~= balance_factor x machine balance.
+
+    Each element moves 2*itemsize bytes (read+write) and runs 2*K FLOPs,
+    so K = balance_factor * (peak/bw) * itemsize."""
+    itemsize = jnp.dtype(dtype).itemsize
+    k = balance_factor * (V5E_PEAK_FLOPS / V5E_HBM_BW) * itemsize
+    return max(int(round(k)), 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fma_chain", "interpret", "use_kernel"))
+def squarewave_load(x, *, fma_chain: int, interpret: bool = False,
+                    use_kernel: bool = True):
+    """One active-phase burst of the square-wave workload."""
+    if use_kernel:
+        return squarewave_kernel(x, fma_chain=fma_chain,
+                                 interpret=interpret)
+    from repro.kernels.squarewave.ref import squarewave_ref
+    return squarewave_ref(x, fma_chain=fma_chain)

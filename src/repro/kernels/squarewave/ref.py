@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the square-wave FMA kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def squarewave_ref(x, *, fma_chain: int):
+    a = jnp.full_like(x, 1.000000119)
+    b = x * 1e-6
+
+    def body(_, acc):
+        return acc * a + b
+
+    return jax.lax.fori_loop(0, fma_chain, body, x)

@@ -1,0 +1,18 @@
+"""Public API: selective scan (mamba inner recurrence)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import selective_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def selective_scan(dt, x, b_mat, c_mat, a, h0, *, interpret=False,
+                   use_kernel=True):
+    if use_kernel:
+        return selective_scan_kernel(dt, x, b_mat, c_mat, a, h0,
+                                     interpret=interpret)
+    from repro.kernels.ssm_scan.ref import selective_scan_ref
+    return selective_scan_ref(dt, x, b_mat, c_mat, a, h0)

@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct input stand-ins for every (arch, shape) cell.
+
+``input_specs(arch, shape)`` returns the exact pytree the lowered step
+consumes — weak-type-correct, shardable, no device allocation.  Modality
+frontends are stubs per the assignment: VLM cells get precomputed patch
+embeddings + M-RoPE position streams; audio cells get precomputed conv-stem
+frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    cd = arch.compute_dtype
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+    else:  # decode
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+
+    if arch.family == "vlm":
+        if shape.kind in ("train", "prefill"):
+            batch["vision_embeds"] = _sds((b, s // 4, arch.d_model), cd)
+            batch["positions"] = _sds((3, b, s), jnp.int32)
+        else:
+            batch["positions"] = _sds((3, b, 1), jnp.int32)
+    if arch.family == "audio" and shape.kind in ("train", "prefill"):
+        batch["audio_frames"] = _sds((b, arch.num_audio_frames, arch.d_model),
+                                     cd)
+    return batch
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig, model=None) -> dict:
+    """Full input pytree for the step lowered at this cell.
+
+    train:   {params, opt_state, batch, step}
+    prefill: {params, batch, cache}
+    decode:  {params, batch, cache, pos}
+    (params/opt_state/cache specs come from the model + optimizer.)
+    """
+    from repro.models import Model
+    from repro.train.optimizer import optimizer_for
+
+    model = model or Model(arch)
+    out = {"batch": batch_specs(arch, shape)}
+    param_structs = model.param_structs()
+    out["params"] = param_structs
+    if shape.kind == "train":
+        opt = optimizer_for(arch)
+        out["opt_state"] = jax.eval_shape(opt.init, param_structs)
+        out["step"] = _sds((), jnp.int32)
+    else:
+        out["cache"] = model.cache_specs(shape.global_batch, shape.seq_len)
+        if shape.kind == "decode":
+            out["pos"] = _sds((), jnp.int32)
+    return out
+
+
+def concrete_batch(arch: ArchConfig, shape: ShapeConfig, seed=0) -> dict:
+    """Materialized random batch matching batch_specs (for real runs)."""
+    key = jax.random.key(seed)
+    specs = batch_specs(arch, shape)
+    out = {}
+    for name, sd in specs.items():
+        key, sub = jax.random.split(key)
+        if sd.dtype == jnp.int32:
+            if name == "positions":
+                s = sd.shape[-1]
+                out[name] = jnp.broadcast_to(
+                    jnp.arange(s, dtype=jnp.int32), sd.shape)
+            else:
+                out[name] = jax.random.randint(
+                    sub, sd.shape, 0, arch.vocab_size, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(sub, sd.shape) * 0.02).astype(
+                sd.dtype)
+    return out

@@ -1,0 +1,153 @@
+"""Mamba-1 selective SSM block (arXiv:2312.00752), TPU-adapted.
+
+Hardware adaptation (DESIGN.md §6): the CUDA selective-scan kernel fuses the
+recurrence in SRAM; on TPU we use a *chunked* scan — ``lax.scan`` over
+sequence chunks with an associative scan inside each chunk, so the
+(B, chunk, d_in, d_state) working set is VMEM-sized instead of the full
+(B, S, d_in, d_state).  ``repro.kernels.ssm_scan`` is the Pallas version of
+the inner chunk; this module is the lowering-friendly jnp form and oracle.
+
+Channel (d_in) dimension is fully parallel (depthwise conv + per-channel SSM),
+so TP shards d_in on "model" with a row-parallel out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamSpec
+
+
+def mamba_specs(cfg):
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dt_rank = max(1, d // 16)
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in), ("embed", "mamba_inner")),
+        "conv_w": ParamSpec((cfg.mamba_d_conv, d_in), (None, "mamba_inner")),
+        "conv_b": ParamSpec((d_in,), ("mamba_inner",), init="zeros"),
+        "x_proj": ParamSpec((d_in, dt_rank + 2 * n), ("mamba_inner", None)),
+        "dt_proj": ParamSpec((dt_rank, d_in), (None, "mamba_inner")),
+        "dt_bias": ParamSpec((d_in,), ("mamba_inner",), init="zeros"),
+        "A_log": ParamSpec((d_in, n), ("mamba_inner", None), init="zeros"),
+        "D": ParamSpec((d_in,), ("mamba_inner",), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("mamba_inner", "embed")),
+    }
+
+
+def _ssm_params(p, x, cfg):
+    """x: (B, L, d_in) -> dt (B,L,d_in), B/C (B,L,N), A (d_in,N)."""
+    dt_rank = p["dt_proj"].shape[0]
+    n = cfg.mamba_d_state
+    f32 = jnp.float32
+    proj = x @ p["x_proj"].astype(x.dtype)
+    dt_in, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_in.astype(f32) @ p["dt_proj"].astype(f32) + p["dt_bias"].astype(f32))
+    a_mat = -jnp.exp(p["A_log"].astype(f32))          # (d_in, N), negative
+    return dt, b_mat.astype(f32), c_mat.astype(f32), a_mat
+
+
+def _chunk_scan(dt, b_mat, c_mat, a_mat, x, h0):
+    """One chunk of the selective scan.
+
+    dt, x: (B, Q, d_in); b_mat, c_mat: (B, Q, N); a_mat: (d_in, N);
+    h0: (B, d_in, N) carry.  Returns (y (B,Q,d_in), h_last).
+    """
+    f32 = jnp.float32
+    xa = x.astype(f32)
+    # discretize: abar = exp(dt*A)  (B,Q,d_in,N); bx = dt*B*x
+    abar = jnp.exp(dt[..., None] * a_mat[None, None])
+    bx = (dt * xa)[..., None] * b_mat[:, :, None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, h = lax.associative_scan(combine, (abar, bx), axis=1)
+    h = h + a_cum * h0[:, None]                        # prefix carry
+    y = jnp.einsum("bqdn,bqn->bqd", h, c_mat)
+    return y.astype(x.dtype), h[:, -1]
+
+
+def mamba_apply(p, cfg, x, *, ssm_state=None, conv_state=None, chunk=512):
+    """x: (B, S, d) -> (y, new_states).
+
+    Train/prefill when states given as None-or-initial and S > 1; decode when
+    S == 1 with states provided.  States: ssm (B, d_in, N), conv
+    (B, d_conv-1, d_in).
+    """
+    b, s, d = x.shape
+    dt_model = x.dtype
+    d_in = cfg.mamba_expand * d
+    dc = cfg.mamba_d_conv
+
+    xz = x @ p["in_proj"].astype(dt_model)
+    xs, z = jnp.split(xz, 2, axis=-1)                  # (B, S, d_in)
+
+    # --- depthwise causal conv over time ---------------------------------
+    if s == 1 and conv_state is not None:
+        window = jnp.concatenate([conv_state.astype(dt_model), xs], axis=1)
+        new_conv = window[:, 1:]
+        conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(dt_model))
+        conv = conv[:, None, :] + p["conv_b"].astype(dt_model)
+    else:
+        if conv_state is None:
+            pad = jnp.zeros((b, dc - 1, d_in), dt_model)
+        else:
+            pad = conv_state.astype(dt_model)
+        window = jnp.concatenate([pad, xs], axis=1)    # (B, S+dc-1, d_in)
+        stacked = jnp.stack(
+            [window[:, i:i + s] for i in range(dc)], axis=0)  # (dc,B,S,d_in)
+        conv = jnp.einsum("kbsc,kc->bsc", stacked, p["conv_w"].astype(dt_model))
+        conv = conv + p["conv_b"].astype(dt_model)
+        new_conv = window[:, -(dc - 1):]
+    xs = jax.nn.silu(conv)
+
+    dt, b_mat, c_mat, a_mat = _ssm_params(p, xs, cfg)
+    h0 = (jnp.zeros((b, d_in, cfg.mamba_d_state), jnp.float32)
+          if ssm_state is None else ssm_state.astype(jnp.float32))
+
+    if s == 1:
+        abar = jnp.exp(dt[:, 0, :, None] * a_mat[None])
+        bx = (dt[:, 0] * xs[:, 0].astype(jnp.float32))[..., None] \
+            * b_mat[:, 0, None, :]
+        h = abar * h0 + bx
+        y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None].astype(dt_model)
+        h_last = h
+    else:
+        q = min(chunk, s)
+        assert s % q == 0, f"seq {s} % chunk {q} != 0"
+        nc = s // q
+
+        @jax.checkpoint
+        def body(h_carry, args):
+            dt_c, b_c, c_c, x_c = args
+            y_c, h_new = _chunk_scan(dt_c, b_c, c_c, a_mat, x_c, h_carry)
+            return h_new, y_c
+
+        def split(t):
+            return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+        h_last, ys = lax.scan(
+            body, h0, (split(dt), split(b_mat), split(c_mat), split(xs)))
+        y = ys.swapaxes(0, 1).reshape(b, s, d_in)
+
+    y = y + xs * p["D"].astype(dt_model)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_model)
+    states = {"ssm": h_last.astype(jnp.float32), "conv": new_conv}
+    return out, states
+
+
+def mamba_state_specs(cfg, batch):
+    d_in = cfg.mamba_expand * cfg.d_model
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, d_in, cfg.mamba_d_state),
+                                    jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.mamba_d_conv - 1, d_in),
+                                     jnp.dtype(cfg.compute_dtype)),
+    }

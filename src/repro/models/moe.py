@@ -1,0 +1,175 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Dispatch strategy (TPU-native rethink, see DESIGN.md §4):
+  * routing is computed redundantly on every model shard (cheap: one (N, E)
+    matmul on the replicated activations),
+  * each model shard owns E/ep experts; it sort-gathers the tokens routed to
+    *its* experts into a capacity-bounded (E_local, C, d) buffer, runs the
+    expert SwiGLU as one grouped einsum, scatters back, and
+  * a single psum over the model axis combines per-shard partial outputs —
+    the same collective a TP FFN would need, so EP costs no extra collective
+    class (this is what makes the jamba/qwen3 dry-runs collective-lean).
+
+Under ``shard_map`` the dispatch is local to each (pod, data) shard, which is
+how production EP systems route per-device batches.  Without a mesh (CPU smoke
+tests) the same local function runs on the full array with all experts.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import ParamSpec
+
+
+def moe_specs(cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.expert_d_ff or cfg.d_ff
+    specs = {
+        "router": ParamSpec((d, m.num_experts), ("embed", None),
+                            init="small_normal"),
+        "w_gate": ParamSpec((m.num_experts, d, f), ("expert", "embed", None)),
+        "w_up": ParamSpec((m.num_experts, d, f), ("expert", "embed", None)),
+        "w_down": ParamSpec((m.num_experts, f, d), ("expert", None, "embed")),
+    }
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        specs["shared"] = {
+            "w_gate": ParamSpec((d, fs), ("embed", "mlp")),
+            "w_up": ParamSpec((d, fs), ("embed", "mlp")),
+            "w_down": ParamSpec((fs, d), ("mlp", "embed")),
+        }
+    return specs
+
+
+def _capacity(n_tokens_local, moe):
+    ideal = moe.top_k * n_tokens_local / moe.num_experts
+    c = int(ideal * moe.capacity_factor) + 1
+    return max(8, min(n_tokens_local, c))
+
+
+def _moe_local(p, x_flat, *, moe, expert_offset, e_local, capacity,
+               psum_axis=None):
+    """Local-shard MoE: x_flat (N, d) replicated across the EP axis.
+
+    Returns (partial_y (N, d), aux dict).  Partial outputs must be psum'd
+    over the EP axis (done here when psum_axis is given).
+    """
+    n, d = x_flat.shape
+    k = moe.top_k
+    f32 = jnp.float32
+
+    logits = x_flat.astype(f32) @ p["router"].astype(f32)     # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = lax.top_k(probs, k)                           # (N, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # ---- aux losses (computed on replicated routing; identical per shard)
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, moe.num_experts, dtype=f32), axis=1),
+        axis=0) / k
+    aux_lb = moe.num_experts * jnp.sum(me * ce)
+    aux_z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = moe.router_aux_weight * aux_lb + moe.router_z_weight * aux_z
+
+    # ---- assignment flattening; keep only this shard's experts
+    flat_e = idx.reshape(-1)                                  # (N*k,)
+    flat_w = gate.reshape(-1).astype(f32)
+    flat_tok = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    local_e = flat_e - expert_offset
+    mine = (local_e >= 0) & (local_e < e_local)
+    sort_key = jnp.where(mine, local_e, e_local)              # drops sort last
+    order = jnp.argsort(sort_key, stable=True)
+    se = sort_key[order]                                      # sorted expert id
+    counts = jnp.bincount(se, length=e_local + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(n * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    dropped = (pos >= capacity) | (se == e_local)
+    buf_e = jnp.where(dropped, e_local, se).astype(jnp.int32)  # OOB -> drop
+    buf_p = jnp.where(dropped, 0, pos).astype(jnp.int32)
+    tok_sorted = flat_tok[order]
+    w_sorted = jnp.where(dropped, 0.0, flat_w[order])
+
+    # ---- gather into (E_local, C, d), grouped expert SwiGLU, scatter back
+    dt = x_flat.dtype
+    buf = jnp.zeros((e_local, capacity, d), dt)
+    buf = buf.at[buf_e, buf_p].set(x_flat[tok_sorted], mode="drop")
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    out_buf = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(dt))
+    contrib = out_buf[jnp.where(dropped, 0, buf_e), buf_p]    # (N*k, d)
+    contrib = contrib * w_sorted[:, None].astype(dt)
+    y = jnp.zeros((n, d), dt).at[tok_sorted].add(
+        jnp.where(dropped[:, None], jnp.zeros((), dt), contrib))
+
+    # ---- shared experts (dense, model-sharded d_ff -> partial sums)
+    if "shared" in p:
+        sp = p["shared"]
+        sg = jax.nn.silu(x_flat @ sp["w_gate"].astype(dt))
+        su = x_flat @ sp["w_up"].astype(dt)
+        y = y + (sg * su) @ sp["w_down"].astype(dt)
+
+    if psum_axis is not None:
+        y = lax.psum(y, psum_axis)
+    return y, aux
+
+
+def moe_apply(p, cfg, x, *, mesh=None, ep_axis="model",
+              dp_axes=("pod", "data")):
+    """x: (B, S, d) -> (y, aux_loss scalar)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+
+    if mesh is None or ep_axis not in mesh.axis_names:
+        xf = x.reshape(b * s, d)
+        y, aux = _moe_local(p, xf, moe=moe, expert_offset=0,
+                            e_local=moe.num_experts,
+                            capacity=_capacity(b * s, moe))
+        return y.reshape(b, s, d), aux
+
+    ep = mesh.shape[ep_axis]
+    assert moe.num_experts % ep == 0, \
+        f"{moe.num_experts} experts not divisible by EP={ep}"
+    e_local = moe.num_experts // ep
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    if b % dp != 0:                 # tiny batches (long_500k) replicate
+        dp_axes, dp = (), 1
+    n_local = (b // dp) * s
+    capacity = _capacity(n_local, moe)
+
+    def shard_fn(p_loc, x_loc):
+        off = lax.axis_index(ep_axis) * e_local
+        xf = x_loc.reshape(-1, d)
+        y, aux = _moe_local(p_loc, xf, moe=moe, expert_offset=off,
+                            e_local=e_local, capacity=capacity,
+                            psum_axis=ep_axis)
+        return y.reshape(x_loc.shape), aux
+
+    # cast expert weights to compute dtype BEFORE shard_map so the FSDP
+    # all-gather into the region moves bf16, not fp32 (halves gather temp)
+    p = jax.tree.map(lambda w: w.astype(x.dtype), p)
+    p_specs = jax.tree.map(lambda _: P(None), p)
+    for name in ("w_gate", "w_up", "w_down"):
+        p_specs[name] = P(ep_axis)
+    if "shared" in p:
+        p_specs["shared"] = {"w_gate": P(None, ep_axis),
+                             "w_up": P(None, ep_axis),
+                             "w_down": P(ep_axis, None)}
+    x_spec = P(dp_axes if dp_axes else None, None, None)
+    y, aux = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(p, x)
+    return y, aux

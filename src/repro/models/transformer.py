@@ -1,0 +1,426 @@
+"""Config-driven model: dense / MoE / hybrid(mamba) / xLSTM / enc-dec / VLM.
+
+One :class:`Model` covers all 10 assigned architectures.  Layers are stacked
+per *pattern position* and iterated with ``lax.scan`` over pattern groups so
+the HLO stays O(pattern) instead of O(num_layers) — essential for the 94-layer
+qwen3-moe and 72-layer jamba dry-runs.
+
+Interfaces (all functional, pjit-friendly):
+  * ``forward_train(params, batch) -> (loss, metrics)``
+  * ``prefill(params, batch) -> (logits, cache)``
+  * ``decode_step(params, batch, cache, pos) -> (logits, cache)``
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ArchConfig, ATTN, ATTN_LOCAL, MAMBA, MLSTM,
+                                SLSTM)
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import xlstm as X
+from repro.models import moe as MOE
+from repro.models.layers import ParamSpec
+
+
+def _block_specs(cfg: ArchConfig, kind: str, layer_pos: int, *,
+                 cross: bool = False):
+    d = cfg.d_model
+    specs = {"norm1": ParamSpec((d,), ("embed",), init="zeros")}
+    if kind in (ATTN, ATTN_LOCAL):
+        specs["core"] = L.attention_specs(cfg)
+    elif kind == MAMBA:
+        specs["core"] = M.mamba_specs(cfg)
+    elif kind == MLSTM:
+        specs["core"] = X.mlstm_specs(cfg)
+    elif kind == SLSTM:
+        specs["core"] = X.slstm_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        specs["cross_norm"] = ParamSpec((d,), ("embed",), init="zeros")
+        specs["cross"] = L.attention_specs(cfg, cross=True)
+    if _has_ffn(cfg, kind):
+        specs["norm2"] = ParamSpec((d,), ("embed",), init="zeros")
+        if _is_moe_layer(cfg, layer_pos):
+            specs["ffn"] = MOE.moe_specs(cfg)
+        else:
+            specs["ffn"] = L.mlp_specs(cfg)
+    return specs
+
+
+def _has_ffn(cfg, kind):
+    return cfg.d_ff > 0 and kind in (ATTN, ATTN_LOCAL, MAMBA)
+
+
+def _is_moe_layer(cfg, layer_pos):
+    return cfg.moe is not None and layer_pos % cfg.moe_every == 0
+
+
+def _stack_specs(specs, n):
+    """Prefix every ParamSpec shape with the group dimension n."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.pattern = tuple(cfg.block_pattern)
+        assert cfg.num_layers % len(self.pattern) == 0, \
+            f"{cfg.num_layers} layers not divisible by pattern {self.pattern}"
+        self.n_groups = cfg.num_layers // len(self.pattern)
+        if cfg.moe is not None:
+            assert len(self.pattern) % cfg.moe_every == 0 or cfg.moe_every == 1
+        self.compute_dtype = jnp.dtype(cfg.compute_dtype)
+
+    # ------------------------------------------------------------------
+    # Parameter specs / init
+    # ------------------------------------------------------------------
+    def specs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        specs = {
+            "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed")),
+            "final_norm": ParamSpec((d,), ("embed",), init="zeros"),
+            "layers": {},
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ParamSpec((d, cfg.vocab_size),
+                                         ("embed", "vocab"))
+        cross = cfg.encoder_layers > 0
+        for p_idx, kind in enumerate(self.pattern):
+            specs["layers"][f"pos{p_idx}"] = _stack_specs(
+                _block_specs(cfg, kind, p_idx, cross=cross), self.n_groups)
+        if cfg.encoder_layers:
+            specs["encoder"] = {
+                "pos_embed": ParamSpec((cfg.num_audio_frames, d),
+                                       (None, "embed")),
+                "final_norm": ParamSpec((d,), ("embed",), init="zeros"),
+                "layers": {"pos0": _stack_specs(
+                    _block_specs(cfg, ATTN, 0), cfg.encoder_layers)},
+            }
+        return specs
+
+    def init(self, key):
+        return L.init_params(self.specs(), key, self.cfg.param_dtype)
+
+    def param_structs(self):
+        return L.param_structs(self.specs(), self.cfg.param_dtype)
+
+    def param_logical_axes(self):
+        return L.param_axes(self.specs())
+
+    # ------------------------------------------------------------------
+    # Block application
+    # ------------------------------------------------------------------
+    def _apply_block(self, kind, p, x, positions, *, layer_pos, cache=None,
+                     cache_index=None, enc_out=None, causal=True):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        new_cache = {}
+        h = L.rms_norm(x, p["norm1"], cfg.rms_eps)
+        if kind in (ATTN, ATTN_LOCAL):
+            window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+            kvc = cache.get("kv") if cache else None
+            out, nkv = L.attention_apply(
+                p["core"], cfg, h, positions, layer_window=window,
+                kv_cache=kvc, cache_index=cache_index, causal=causal,
+                mesh=self.mesh)
+            if nkv is not None:
+                new_cache["kv"] = nkv
+        elif kind == MAMBA:
+            out, st = M.mamba_apply(
+                p["core"], cfg, h,
+                ssm_state=cache.get("ssm") if cache else None,
+                conv_state=cache.get("conv") if cache else None)
+            if cache is not None:
+                new_cache.update(st)
+        elif kind == MLSTM:
+            out, st = X.mlstm_apply(p["core"], cfg, h,
+                                    state=cache.get("mlstm") if cache else None)
+            if cache is not None:
+                new_cache["mlstm"] = st
+        elif kind == SLSTM:
+            out, st = X.slstm_apply(p["core"], cfg, h,
+                                    state=cache.get("slstm") if cache else None)
+            if cache is not None:
+                new_cache["slstm"] = st
+        x = x + out
+
+        has_cached_cross = cache is not None and "cross_k" in cache
+        if "cross" in p and (enc_out is not None or has_cached_cross):
+            hc = L.rms_norm(x, p["cross_norm"], cfg.rms_eps)
+            dt = hc.dtype
+            ck = None
+            if has_cached_cross and enc_out is None:
+                ck = cache["cross_k"]
+            if ck is None:
+                nkv_h = cfg.num_kv_heads * cfg.resolved_head_dim
+                b, f, _ = enc_out.shape
+                ck = (enc_out @ p["cross"]["wk"].astype(dt)).reshape(
+                    b, f, cfg.num_kv_heads, cfg.resolved_head_dim)
+                cv = (enc_out @ p["cross"]["wv"].astype(dt)).reshape(
+                    b, f, cfg.num_kv_heads, cfg.resolved_head_dim)
+            else:
+                cv = cache["cross_v"]
+            out, _ = L.attention_apply(p["cross"], cfg, hc, positions,
+                                       cross_kv=(ck.astype(dt), cv.astype(dt)))
+            if cache is not None:
+                new_cache["cross_k"], new_cache["cross_v"] = ck, cv
+            x = x + out
+
+        if "ffn" in p:
+            hf = L.rms_norm(x, p["norm2"], cfg.rms_eps)
+            if _is_moe_layer(cfg, layer_pos):
+                out, a = MOE.moe_apply(p["ffn"], cfg, hf, mesh=self.mesh)
+                aux = aux + a
+            else:
+                out = L.mlp_apply(p["ffn"], hf)
+            x = x + out
+        return x, new_cache, aux
+
+    mesh = None   # set by the distribution layer (None => local smoke mode)
+
+    def _constrain_act(self, x):
+        """Pin (B, S, d) activations to batch-DP sharding.  SPMD propagation
+        loses the batch sharding through chunked scans without this."""
+        if self.mesh is None:
+            return x
+        dp = tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+        if not dp or x.shape[0] % self._dp_size() != 0:
+            return x
+        spec = jax.sharding.PartitionSpec(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    def _dp_size(self):
+        n = 1
+        for a in ("pod", "data"):
+            if a in self.mesh.axis_names:
+                n *= self.mesh.shape[a]
+        return n
+
+    # ------------------------------------------------------------------
+    # Stack runner
+    # ------------------------------------------------------------------
+    def _run_stack(self, stacked_params, x, positions, *, caches=None,
+                   cache_index=None, enc_out=None, remat=None):
+        cfg = self.cfg
+        pattern = self.pattern
+        remat = cfg.remat if remat is None else remat
+        import os
+        if os.environ.get("REPRO_GATHER_BF16") == "1":
+            # §Perf knob: cast weights to compute dtype BEFORE the scan so
+            # FSDP all-gathers move bf16 instead of fp32 (halves gather
+            # bytes; grads/optimizer stay fp32)
+            stacked_params = jax.tree.map(
+                lambda w: w.astype(self.compute_dtype)
+                if w.ndim >= 3 else w, stacked_params)
+
+        def body(carry, scan_in):
+            xc, aux_sum = carry
+            pg, cg = scan_in
+            new_cg = {}
+            for p_idx, kind in enumerate(pattern):
+                key = f"pos{p_idx}"
+                bc = cg[key] if cg is not None else None
+                xc, nc, aux = self._apply_block(
+                    kind, pg[key], xc, positions, layer_pos=p_idx,
+                    cache=bc, cache_index=cache_index, enc_out=enc_out)
+                xc = self._constrain_act(xc)
+                new_cg[key] = nc
+                aux_sum = aux_sum + aux
+            return (xc, aux_sum), new_cg
+
+        if remat:
+            import os
+            pol = os.environ.get("REPRO_REMAT_POLICY", "nothing")
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if pol == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux), new_caches = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (stacked_params, caches))
+        return x, aux, new_caches
+
+    # ------------------------------------------------------------------
+    # Embedding / unembedding
+    # ------------------------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"].astype(self.compute_dtype)[tokens]
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(self.compute_dtype)
+            n_vis = ve.shape[1]
+            pad = x.shape[1] - n_vis
+            ve_full = jnp.pad(ve, ((0, 0), (0, pad), (0, 0)))
+            is_vis = (jnp.arange(x.shape[1]) < n_vis)[None, :, None]
+            x = jnp.where(is_vis, ve_full, x)
+        return self._constrain_act(x)
+
+    def _positions(self, batch, seq, offset=0):
+        cfg = self.cfg
+        b = batch["tokens"].shape[0]
+        if "positions" in batch:
+            return batch["positions"]
+        pos = offset + jnp.arange(seq, dtype=jnp.int32)[None, :]
+        pos = jnp.broadcast_to(pos, (b, seq))
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[None], (3, b, seq))
+        return pos
+
+    def _logits(self, params, x, chunked_labels=None):
+        """Either full logits (decode) or chunked CE loss (train)."""
+        cfg = self.cfg
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(self.compute_dtype)
+        if chunked_labels is None:
+            logits = x @ head
+            return L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        labels = chunked_labels
+        b, s, _ = x.shape
+        chunk = min(512, s)
+        assert s % chunk == 0
+        nc = s // chunk
+
+        vocab_iota = jnp.arange(cfg.vocab_size, dtype=jnp.int32)
+
+        @jax.checkpoint
+        def chunk_loss(carry, idx):
+            xc = self._constrain_act(
+                lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1))
+            lc = lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+            logits = L.softcap((xc @ head).astype(jnp.float32),
+                               cfg.final_softcap)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            # SPMD-friendly gold-logit extraction: masked reduce instead of
+            # take_along_axis so the vocab-sharded dim reduces with a psum.
+            gold = jnp.sum(
+                jnp.where(vocab_iota[None, None, :] == lc[..., None],
+                          logits, 0.0), axis=-1)
+            return carry + jnp.sum(logz - gold), None
+
+        total, _ = lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                            jnp.arange(nc))
+        return total / (b * s)
+
+    # ------------------------------------------------------------------
+    # Encoder (whisper)
+    # ------------------------------------------------------------------
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        enc = params["encoder"]
+        frames = batch["audio_frames"].astype(self.compute_dtype)
+        x = frames + enc["pos_embed"].astype(self.compute_dtype)[None]
+        b, f, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+
+        def body(carry, pg):
+            xc, _ = carry
+            xc, _, _ = self._apply_block(ATTN, pg["pos0"], xc, pos,
+                                         layer_pos=0, causal=False)
+            return (xc, jnp.zeros((), jnp.float32)), None
+
+        (x, _), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             enc["layers"])
+        return L.rms_norm(x, enc["final_norm"], cfg.rms_eps)
+
+    # ------------------------------------------------------------------
+    # Public entry points
+    # ------------------------------------------------------------------
+    def forward_train(self, params, batch):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = self._positions(batch, x.shape[1])
+        enc_out = self._encode(params, batch) if cfg.encoder_layers else None
+        x, aux, _ = self._run_stack(params["layers"], x, positions,
+                                    enc_out=enc_out)
+        x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+        labels = batch.get("labels", batch["tokens"])
+        ce = self._logits(params, x, chunked_labels=labels)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def cache_specs(self, batch_size, max_len):
+        """ShapeDtypeStruct pytree for the decode cache."""
+        import os
+        cfg = self.cfg
+        h, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        cd = self.compute_dtype
+        kv_dt = os.environ.get("REPRO_KV_DTYPE")   # §Perf knob (e.g. f8)
+        cd = jnp.dtype(kv_dt) if kv_dt else cd
+        g = self.n_groups
+        caches = {}
+        for p_idx, kind in enumerate(self.pattern):
+            c = {}
+            if kind in (ATTN, ATTN_LOCAL):
+                # Sliding-window layers use a ring cache bounded by the
+                # window (position p -> slot p % W).
+                eff = max_len
+                if kind == ATTN_LOCAL and cfg.sliding_window:
+                    eff = min(max_len, cfg.sliding_window)
+                c["kv"] = {
+                    "k": jax.ShapeDtypeStruct(
+                        (g, batch_size, eff, nkv, h), cd),
+                    "v": jax.ShapeDtypeStruct(
+                        (g, batch_size, eff, nkv, h), cd),
+                }
+            elif kind == MAMBA:
+                st = M.mamba_state_specs(cfg, batch_size)
+                c.update({k: jax.ShapeDtypeStruct((g,) + v.shape, v.dtype)
+                          for k, v in st.items()})
+            elif kind == MLSTM:
+                st = X.mlstm_state_specs(cfg, batch_size)
+                c["mlstm"] = {k: jax.ShapeDtypeStruct((g,) + v.shape, v.dtype)
+                              for k, v in st.items()}
+            elif kind == SLSTM:
+                st = X.slstm_state_specs(cfg, batch_size)
+                c["slstm"] = {k: jax.ShapeDtypeStruct((g,) + v.shape, v.dtype)
+                              for k, v in st.items()}
+            if cfg.encoder_layers:
+                f = cfg.num_audio_frames
+                c["cross_k"] = jax.ShapeDtypeStruct(
+                    (g, batch_size, f, nkv, h), cd)
+                c["cross_v"] = jax.ShapeDtypeStruct(
+                    (g, batch_size, f, nkv, h), cd)
+            caches[f"pos{p_idx}"] = c
+        return caches
+
+    def init_cache(self, batch_size, max_len):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(batch_size, max_len))
+
+    def prefill(self, params, batch, cache):
+        """Full-sequence forward writing the cache; returns last logits."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        positions = self._positions(batch, s)
+        enc_out = self._encode(params, batch) if cfg.encoder_layers else None
+        x, _, cache = self._run_stack(
+            params["layers"], x, positions, caches=cache,
+            cache_index=jnp.zeros((), jnp.int32), enc_out=enc_out)
+        x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = self._logits(params, x[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params, batch, cache, pos):
+        """batch["tokens"]: (B, 1); pos: scalar int32 current length."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = self._positions(batch, 1, offset=pos)
+        enc_out = None   # cross kv comes from the cache during decode
+        x, _, cache = self._run_stack(params["layers"], x, positions,
+                                      caches=cache, cache_index=pos,
+                                      enc_out=enc_out, remat=False)
+        x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = self._logits(params, x)
+        return logits, cache

@@ -1,0 +1,228 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel form) and sLSTM (scalar
+memory, sequential) — arXiv:2405.04517.
+
+mLSTM: pre-up-projection (factor cfg.xlstm_proj_factor), exponential
+input gates with max-stabilizer.  Training/prefill uses the parallel
+(quadratic, query-chunked) form; decode uses the recurrent (C, n, m) state.
+TP: v/z column-sharded on "model", down row-parallel; q/k replicated
+(head count 4 < model axis — see DESIGN.md §4).
+
+sLSTM: block-diagonal (per-head) recurrent weights, true sequential scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg):
+    d = cfg.d_model
+    d_in = int(cfg.xlstm_proj_factor * d)
+    h = cfg.num_heads
+    dh = d_in // h
+    return {
+        "up": ParamSpec((d, 2 * d_in), ("embed", "mlp")),
+        # block-diagonal per-head projections (arXiv:2405.04517 §mLSTM);
+        # FSDP shards the input dh dim
+        "wq": ParamSpec((h, dh, dh), (None, "fsdp", None)),
+        "wk": ParamSpec((h, dh, dh), (None, "fsdp", None)),
+        "wv": ParamSpec((h, dh, dh), (None, "fsdp", None)),
+        "w_igate": ParamSpec((d_in, h), (None, None), init="small_normal"),
+        "w_fgate": ParamSpec((d_in, h), (None, None), init="small_normal"),
+        "b_igate": ParamSpec((h,), (None,), init="zeros"),
+        "b_fgate": ParamSpec((h,), (None,), init="ones"),
+        "down": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _heads(t, h):
+    b, s, d = t.shape
+    return t.reshape(b, s, h, d // h).swapaxes(1, 2)   # (B, H, S, dh)
+
+
+def mlstm_apply(p, cfg, x, *, state=None, q_chunk=1024):
+    """x: (B, S, d) -> (y, new_state).
+
+    state: dict(C=(B,H,dk,dv), n=(B,H,dk), m=(B,H)) or None.
+    """
+    b, s, d = x.shape
+    dt = x.dtype
+    nh = cfg.num_heads
+    d_in = int(cfg.xlstm_proj_factor * d)
+    f32 = jnp.float32
+
+    xz = x @ p["up"].astype(dt)
+    xi, z = jnp.split(xz, 2, axis=-1)                   # (B, S, d_in)
+    dh = d_in // nh
+    xh = xi.reshape(b, s, nh, dh)                       # per-head view
+    # block-diagonal projections -> (B, H, S, dh)
+    q = jnp.einsum("bshd,hde->bhse", xh, p["wq"].astype(dt)).astype(f32)
+    k = jnp.einsum("bshd,hde->bhse", xh, p["wk"].astype(dt)).astype(f32)
+    v = jnp.einsum("bshd,hde->bhse", xh, p["wv"].astype(dt)).astype(f32)
+    scale = 1.0 / jnp.sqrt(dh).astype(f32)
+
+    ig = (xi.astype(f32) @ p["w_igate"].astype(f32)
+          + p["b_igate"].astype(f32)).swapaxes(1, 2)   # (B, H, S)
+    fg = (xi.astype(f32) @ p["w_fgate"].astype(f32)
+          + p["b_fgate"].astype(f32)).swapaxes(1, 2)
+
+    if s == 1 and state is not None:
+        # --- recurrent decode step ---------------------------------------
+        c0, n0, m0 = state["C"], state["n"], state["m"]
+        it, ft = ig[..., 0], fg[..., 0]                 # (B, H)
+        logf = jax.nn.log_sigmoid(ft)
+        m1 = jnp.maximum(logf + m0, it)
+        i_s = jnp.exp(it - m1)
+        f_s = jnp.exp(logf + m0 - m1)
+        kt, vt, qt = k[:, :, 0], v[:, :, 0], q[:, :, 0]  # (B, H, dh)
+        c1 = f_s[..., None, None] * c0 \
+            + i_s[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n1 = f_s[..., None] * n0 + i_s[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt * scale, c1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt * scale, n1)),
+                          jnp.exp(-m1))
+        y = (num / den[..., None])[:, :, None]          # (B, H, 1, dh)
+        new_state = {"C": c1, "n": n1, "m": m1}
+    else:
+        # --- parallel (chunked-query quadratic) form ----------------------
+        logf = jax.nn.log_sigmoid(fg)                   # (B, H, S)
+        fcum = jnp.cumsum(logf, axis=-1)                # F_t
+
+        def q_block(qi):
+            t0 = qi * q_chunk
+            qt = lax.dynamic_slice_in_dim(q, t0, q_chunk, axis=2)
+            ft_q = lax.dynamic_slice_in_dim(fcum, t0, q_chunk, axis=2)
+            # D_ts = F_t - F_s + i_s for s<=t
+            dmat = ft_q[..., :, None] - fcum[..., None, :] + ig[..., None, :]
+            tpos = t0 + jnp.arange(q_chunk)
+            mask = tpos[:, None] >= jnp.arange(s)[None, :]
+            dmat = jnp.where(mask[None, None], dmat, -jnp.inf)
+            mrow = jnp.max(dmat, axis=-1)               # (B, H, Qc)
+            w = jnp.exp(dmat - mrow[..., None])
+            sc = jnp.einsum("bhqd,bhkd->bhqk", qt * scale, k) * w
+            num = jnp.einsum("bhqk,bhkv->bhqv", sc, v)
+            den = jnp.maximum(jnp.abs(jnp.sum(sc, axis=-1)), jnp.exp(-mrow))
+            return num / den[..., None], mrow
+
+        q_chunk = min(q_chunk, s)
+        assert s % q_chunk == 0
+        nq = s // q_chunk
+        if nq == 1:
+            y, _ = q_block(0)
+        else:
+            _, (ys, _) = lax.scan(
+                jax.checkpoint(lambda c, i: (c, q_block(i))),
+                None, jnp.arange(nq))
+            # ys: (nq, B, H, Qc, dh) -> (B, H, S, dh)
+            y = jnp.moveaxis(ys, 0, 2).reshape(b, nh, s, dh)
+        # final state for prefill -> decode handoff
+        last_f = fcum[..., -1]
+        dlast = last_f[..., None] - fcum + ig            # (B, H, S)
+        m_last = jnp.max(dlast, axis=-1)
+        wlast = jnp.exp(dlast - m_last[..., None])
+        c_last = jnp.einsum("bhs,bhsk,bhsv->bhkv", wlast, k, v)
+        n_last = jnp.einsum("bhs,bhsk->bhk", wlast, k)
+        new_state = {"C": c_last, "n": n_last, "m": m_last}
+
+    y = y.swapaxes(1, 2).reshape(b, s, d_in).astype(dt)
+    y = y * jax.nn.silu(z)
+    return y @ p["down"].astype(dt), new_state
+
+
+def mlstm_state_specs(cfg, batch):
+    d_in = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    dh = d_in // h
+    return {
+        "C": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    d_in = int(cfg.xlstm_proj_factor * d)
+    return {
+        # input projections for gates (z, i, f, o)
+        "w_in": ParamSpec((d, 4 * d), ("embed", None)),
+        "b_in": ParamSpec((4 * d,), (None,), init="zeros"),
+        # block-diagonal recurrent weights per head, per gate
+        "r_z": ParamSpec((h, dh, dh), (None, None, None), init="small_normal"),
+        "r_i": ParamSpec((h, dh, dh), (None, None, None), init="small_normal"),
+        "r_f": ParamSpec((h, dh, dh), (None, None, None), init="small_normal"),
+        "r_o": ParamSpec((h, dh, dh), (None, None, None), init="small_normal"),
+        # gated FFN after the core (post-up-projection block)
+        "up_gate": ParamSpec((d, d_in), ("embed", "mlp")),
+        "up": ParamSpec((d, d_in), ("embed", "mlp")),
+        "down": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def slstm_apply(p, cfg, x, *, state=None):
+    """x: (B, S, d) -> (y, new_state); state dims (B, d) + stabilizers."""
+    b, s, d = x.shape
+    dt = x.dtype
+    h = cfg.num_heads
+    dh = d // h
+    f32 = jnp.float32
+
+    gates_in = (x @ p["w_in"].astype(dt)).astype(f32) \
+        + p["b_in"].astype(f32)                         # (B, S, 4d)
+
+    if state is None:
+        state = slstm_init_state(cfg, b)
+    hz, cz, nz, mz = (state[k].astype(f32) for k in ("h", "c", "n", "m"))
+
+    def rmat(w, hv):
+        return jnp.einsum("bhk,hkj->bhj", hv.reshape(b, h, dh),
+                          w.astype(f32)).reshape(b, d)
+
+    def step(carry, g_t):
+        hp, cp, np_, mp = carry
+        zt = jnp.tanh(g_t[:, :d] + rmat(p["r_z"], hp))
+        it = g_t[:, d:2 * d] + rmat(p["r_i"], hp)
+        ft = g_t[:, 2 * d:3 * d] + rmat(p["r_f"], hp)
+        ot = jax.nn.sigmoid(g_t[:, 3 * d:] + rmat(p["r_o"], hp))
+        logf = jax.nn.log_sigmoid(ft)
+        mt = jnp.maximum(logf + mp, it)
+        i_s = jnp.exp(it - mt)
+        f_s = jnp.exp(logf + mp - mt)
+        ct = f_s * cp + i_s * zt
+        nt = f_s * np_ + i_s
+        ht = ot * ct / jnp.maximum(nt, 1e-6)
+        return (ht, ct, nt, mt), ht
+
+    (hz, cz, nz, mz), hs = lax.scan(
+        step, (hz, cz, nz, mz), gates_in.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(dt)                    # (B, S, d)
+
+    g = jax.nn.silu(y @ p["up_gate"].astype(dt)) * (y @ p["up"].astype(dt))
+    out = g @ p["down"].astype(dt)
+    new_state = {"h": hz, "c": cz, "n": nz, "m": mz}
+    return out, new_state
+
+
+def slstm_init_state(cfg, batch):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": z}
+
+
+def slstm_state_specs(cfg, batch):
+    d = cfg.d_model
+    sd = jax.ShapeDtypeStruct((batch, d), jnp.float32)
+    return {"h": sd, "c": sd, "n": sd, "m": sd}

@@ -1,0 +1,93 @@
+"""Batched serving engine: continuous prefill + decode with KV caches.
+
+The per-request lifecycle mirrors production engines: admit requests into
+fixed batch slots, prefill writes the slot's cache, decode steps advance
+all active slots in lock-step, finished slots are recycled.  Every phase is
+annotated on the RegionTracer so the attribution stack sees
+prefill/decode/admission phases — serving is a first-class power-analysis
+workload in the paper's sense (short, bursty phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tracing import RegionTracer
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (prompt_len,)
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, batch_slots=4,
+                 max_len=512, tracer: Optional[RegionTracer] = None,
+                 greedy=True):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.tracer = tracer or RegionTracer()
+        self.greedy = greedy
+        self.cache = model.init_cache(batch_slots, max_len)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        self._active: dict = {}
+        self._pos = 0
+
+    def _pad_prompts(self, reqs):
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.slots, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        return jnp.asarray(toks), plen
+
+    def run(self, requests):
+        """Serve a list of requests (<= slots at a time), batched."""
+        results = {}
+        queue = list(requests)
+        while queue:
+            batch = queue[:self.slots]
+            queue = queue[self.slots:]
+            while len(batch) < self.slots:       # pad with a dummy copy
+                batch.append(dataclasses.replace(
+                    batch[0], rid=-len(batch), max_new_tokens=0))
+            with self.tracer.region("admission"):
+                toks, plen = self._pad_prompts(batch)
+                self.cache = self.model.init_cache(self.slots, self.max_len)
+            with self.tracer.region("prefill"):
+                logits, self.cache = self._prefill(
+                    self.params, {"tokens": toks}, self.cache)
+                jax.block_until_ready(logits)
+            pos = plen
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            for i, r in enumerate(batch):
+                if r.max_new_tokens > 0:
+                    r.generated.append(int(nxt[i]))
+            max_new = max(r.max_new_tokens for r in batch)
+            with self.tracer.region("decode"):
+                for t in range(1, max_new):
+                    logits, self.cache = self._decode(
+                        self.params, {"tokens": nxt[:, None]}, self.cache,
+                        jnp.asarray(pos, jnp.int32))
+                    nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+                    pos += 1
+                    for i, r in enumerate(batch):
+                        if len(r.generated) < r.max_new_tokens:
+                            r.generated.append(int(nxt[i]))
+                jax.block_until_ready(nxt)
+            for r in batch:
+                if r.rid >= 0:
+                    r.done = True
+                    results[r.rid] = r.generated
+        return results

@@ -1,0 +1,122 @@
+"""Sharded, atomic, elastic checkpointing.
+
+Design for 1000+ nodes (DESIGN.md §4):
+  * atomic: write to ``step_N.tmp/`` then rename — a crash mid-save never
+    corrupts the latest checkpoint,
+  * manifest-driven: ``manifest.json`` records the pytree structure, leaf
+    shapes/dtypes and the save-time mesh, so restore works on a DIFFERENT
+    mesh shape (elastic rescale) — leaves are saved as full logical arrays
+    here (single-host container); on real pods each host writes its shard
+    and the manifest records the index map,
+  * retention: keep the last K steps,
+  * integrity: per-leaf byte checksums validated on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _leaf_name(i):
+    return f"leaf_{i:05d}.npy"
+
+
+def save_checkpoint(ckpt_dir, step: int, tree, *, keep: int = 3,
+                    extra_meta: dict = None):
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "leaves": [],
+        "meta": extra_meta or {},
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        path = tmp / _leaf_name(i)
+        np.save(path, arr, allow_pickle=False)
+        manifest["leaves"].append({
+            "name": _leaf_name(i),
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "sha256": hashlib.sha256(path.read_bytes()).hexdigest()[:16],
+        })
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic publish
+
+    # retention
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and not p.name.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)
+    return final
+
+
+def latest_step(ckpt_dir):
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
+             if p.is_dir() and p.name.startswith("step_")
+             and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir, tree_like, *, step: int = None,
+                       shardings=None):
+    """Restore into the structure of ``tree_like``.
+
+    shardings: optional matching pytree of NamedSharding for the CURRENT
+    mesh — this is the elastic-rescale path (save on mesh A, restore on
+    mesh B): leaves are placed with ``jax.device_put`` under the new
+    sharding regardless of the save-time mesh.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    leaves_like, treedef = _flatten(tree_like)
+    assert manifest["n_leaves"] == len(leaves_like), \
+        f"checkpoint has {manifest['n_leaves']} leaves, " \
+        f"model expects {len(leaves_like)}"
+    sh_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                 else [None] * len(leaves_like))
+
+    out = []
+    for i, (like, rec) in enumerate(zip(leaves_like, manifest["leaves"])):
+        path = d / rec["name"]
+        digest = hashlib.sha256(path.read_bytes()).hexdigest()[:16]
+        if digest != rec["sha256"]:
+            raise IOError(f"checksum mismatch for {path}")
+        arr = np.load(path, allow_pickle=False)
+        assert list(arr.shape) == list(like.shape), \
+            f"leaf {i}: {arr.shape} vs expected {like.shape}"
+        if sh_leaves[i] is not None:
+            out.append(jax.device_put(arr, sh_leaves[i]))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree.unflatten(treedef, out), step, manifest["meta"]

@@ -1,0 +1,93 @@
+"""Train-step construction: value_and_grad + microbatch accumulation + update.
+
+``make_train_step`` builds the pjit-able pure function lowered by the
+dry-run and executed by the training loop.  Microbatch accumulation is a
+``lax.scan`` so the pod-axis (DCN) gradient reduce of microbatch *k* can
+overlap compute of *k+1* under XLA's latency-hiding scheduler.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _split_micro(batch, micro):
+    def split(t):
+        if t.ndim == 3 and t.shape[0] == 3:          # (3, B, S) positions
+            t = t.reshape(3, micro, t.shape[1] // micro, t.shape[2])
+            return jnp.swapaxes(t, 0, 1)             # (micro, 3, bm, S)
+        return t.reshape(micro, t.shape[0] // micro, *t.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def pick_microbatches(arch, shape, dp_size, stash_budget_bytes=3e9):
+    """Microbatch count sized so the layer-scan carry stash fits.
+
+    The dominant train-memory term is the residual saved per scanned layer
+    for backward:  num_layers x tokens_per_micro x d_model x 2B.  Choose the
+    smallest micro count whose stash fits ``stash_budget_bytes``, bounded by
+    the local batch size.
+    """
+    if shape.kind != "train":
+        return 1
+    local_tokens = shape.tokens // max(dp_size, 1)
+    local_batch = max(shape.global_batch // max(dp_size, 1), 1)
+    per_layer = arch.d_model * 2          # bf16 residual per token per layer
+    target = max(int(stash_budget_bytes / (arch.num_layers * per_layer)),
+                 shape.seq_len)           # >= one sequence per micro
+    micro = max(1, local_tokens // target)
+    while local_batch % micro and micro > 1:
+        micro -= 1
+    return min(micro, local_batch)
+
+
+def make_train_step(model, opt, lr_fn, *, micro=1, grad_hook=None):
+    """Returns train_step(params, opt_state, batch, step) -> (p, s, metrics).
+
+    grad_hook: optional fn(grads) -> grads (e.g. compression, noise probes).
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = model.forward_train(params, mb)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch, step):
+        if micro == 1:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbatch = _split_micro(batch, micro)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = lax.scan(body, (g0, jnp.zeros((), jnp.float32)),
+                                       mbatch)
+            grads = jax.tree.map(lambda g: g / micro, gsum)
+            loss = lsum / micro
+        if grad_hook is not None:
+            grads = grad_hook(grads)
+        new_params, new_opt, gnorm = opt.update(
+            grads, opt_state, params, lr_fn(step))
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr_fn(step),
+                   "step": step + 1}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.forward_train(params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

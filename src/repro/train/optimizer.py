@@ -1,0 +1,164 @@
+"""Optimizers (AdamW, Adafactor) and LR schedules (cosine, WSD).
+
+Pure-functional, pytree-shaped like the params, AOT-lowerable.  Adafactor
+(factored second moments, arXiv:1804.04235) is the default for the >100 B
+archs so optimizer state stays O(rows+cols) instead of O(params) — this is
+what keeps the jamba-398b dry-run inside per-chip HBM (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr=3e-4, warmup=1000, total=100_000, min_frac=0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (step + 1.0) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(base_lr=3e-4, warmup=1000, stable=80_000, decay=19_000,
+                 min_frac=0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup, long
+    constant plateau, short exponential-style decay tail."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * (step + 1.0) / max(warmup, 1)
+        in_decay = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = base_lr * (min_frac ** in_decay)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, base_lr, dec))
+    return lr
+
+
+def schedule_for(arch_name: str, base_lr=3e-4, total=100_000):
+    if arch_name.startswith("minicpm"):
+        return wsd_schedule(base_lr, warmup=total // 100,
+                            stable=int(total * 0.8), decay=int(total * 0.19))
+    return cosine_schedule(base_lr, warmup=total // 100, total=total)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable            # (grads, state, params, lr) -> (new_p, new_s)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, clip=1.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                         state["v"], grads)
+        mh = 1.0 / (1 - b1 ** cf)
+        vh = 1.0 / (1 - b2 ** cf)
+
+        def upd(p, mm, vv):
+            u = (mm * mh) / (jnp.sqrt(vv * vh) + eps) + \
+                weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, m, v)
+        return new_p, {"m": m, "v": v, "count": c}, gnorm
+
+    return Optimizer(init, update)
+
+
+def adafactor(eps=1e-30, clip_rms=1.0, weight_decay=0.0, min_dim=2,
+              decay_pow=0.8):
+    """Factored second moments for >=2-D params, full for vectors."""
+    def _factored(p):
+        return p.ndim >= min_dim
+
+    def init(params):
+        def slot(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(slot, params,
+                                      is_leaf=lambda x: hasattr(x, "ndim")
+                                      or hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** (-decay_pow)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_rms)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["slots"])
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_s = jax.tree.unflatten(tdef, [o[1] for o in out])
+        gnorm = _global_norm(grads)
+        return new_p, {"slots": new_s, "count": c}, gnorm
+
+    return Optimizer(init, update)
+
+
+def optimizer_for(arch_cfg) -> Optimizer:
+    if arch_cfg.optimizer == "adafactor":
+        return adafactor()
+    return adamw()

@@ -1,0 +1,82 @@
+import numpy as np
+
+from repro.core import (NodeFabric, ToolSpec, attribute_energy,
+                        energy_conservation_residual,
+                        estimate_static_offsets, estimate_upstream_slope,
+                        nic_rail_corrections, split_energy_savings,
+                        square_wave)
+from repro.core.attribution import stacked_node_power
+
+
+def _traces(seed=0):
+    truth = square_wave(2.0, 4, lead_s=1.5, tail_s=1.5)
+    fabric = NodeFabric(chip_truths=[truth] * 4)
+    return truth, fabric.sample_all(ToolSpec(1e-3), seed=seed)
+
+
+def test_nic_offset_estimation_30w():
+    """Appendix-B procedure recovers the 30 W NIC rail offset."""
+    truth, traces = _traces()
+    pm = {n: t for n, t in traces.items()
+          if n.startswith("pm_accel") and n.endswith("_power")}
+    chips = {n: t for n, t in traces.items()
+             if n.startswith("chip") and n.endswith("_energy")}
+    offs, _ = estimate_static_offsets(
+        pm, chips, idle_windows=[(0.3, 1.3), (9.8, 10.8)])
+    # shared-rail chips 0/2 carry NIC + upstream; 1/3 upstream only
+    assert offs["pm_accel0_power"] - offs["pm_accel1_power"] > 20
+    assert offs["pm_accel2_power"] - offs["pm_accel3_power"] > 20
+    assert abs((offs["pm_accel0_power"] - offs["pm_accel1_power"]) - 30) < 8
+
+
+def test_upstream_slope_estimation():
+    truth, traces = _traces()
+    slope = estimate_upstream_slope(
+        traces["pm_accel1_power"], traces["chip1_energy"],
+        steady_windows=[(1.8, 2.4), (3.8, 4.4)])   # inside active halves
+    assert abs(slope - 1.07) < 0.04
+
+
+def test_corrections_restore_onchip_power():
+    truth, traces = _traces()
+    corr = nic_rail_corrections()
+    phases = [("active", 2.2, 2.9)]
+    pe_pm = attribute_energy(traces["pm_accel0_power"], phases,
+                             corrections=corr)
+    pe_chip = attribute_energy(traces["chip0_energy"], phases)
+    assert abs(pe_pm[0].mean_power_w - pe_chip[0].mean_power_w) < 8.0
+
+
+def test_energy_conservation_through_attribution():
+    truth, traces = _traces()
+    phases = [("a", 1.6, 2.4), ("b", 2.4, 3.3), ("c", 4.0, 5.5)]
+    res = energy_conservation_residual(traces["chip0_energy"], phases)
+    assert res < 1e-6
+
+
+def test_attribution_matches_ground_truth_energy():
+    truth, traces = _traces()
+    phases = [("active1", float(truth.times[1]), float(truth.times[2]))]
+    pe = attribute_energy(traces["chip0_energy"], phases)
+    e_true = float(truth.energy_between(*phases[0][1:]))
+    assert abs(pe[0].energy_j - e_true) / e_true < 0.02
+
+
+def test_stacked_components():
+    truth, traces = _traces()
+    grid = np.arange(1.0, 10.0, 0.01)
+    st = stacked_node_power(traces, grid)
+    names = set(st["components"])
+    assert {"chip0_energy", "chip1_energy", "chip2_energy",
+            "chip3_energy", "pm_cpu_power", "pm_memory_power"} <= names
+
+
+def test_split_energy_savings_identity():
+    """saving decomposition must satisfy E_m/E_f = time_ratio*power_ratio."""
+    truth, traces = _traces()
+    full = attribute_energy(traces["chip0_energy"], [("w", 1.6, 5.5)])
+    mixed = attribute_energy(traces["chip0_energy"], [("w", 1.6, 2.6)])
+    dec = split_energy_savings(full, mixed)
+    lhs = dec["energy_mixed_j"] / dec["energy_full_j"]
+    rhs = dec["time_ratio"] * dec["power_ratio"]
+    assert abs(lhs - rhs) < 1e-9

@@ -1,0 +1,141 @@
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.fault_tolerance import (RestartPolicy,
+                                               StragglerMonitor,
+                                               TrainingFault,
+                                               run_with_restarts)
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+
+
+@pytest.fixture
+def tree():
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,)), "count": jnp.asarray(7)}}
+
+
+def test_roundtrip(tmp_path, tree):
+    save_checkpoint(tmp_path, 3, tree)
+    restored, step, _ = restore_checkpoint(tmp_path, tree)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_and_latest(tmp_path, tree):
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir())
+    assert steps == [4, 5]
+    assert latest_step(tmp_path) == 5
+
+
+def test_corruption_detected(tmp_path, tree):
+    save_checkpoint(tmp_path, 1, tree)
+    leaf = next(Path(tmp_path, "step_00000001").glob("leaf_*.npy"))
+    data = bytearray(leaf.read_bytes())
+    data[-1] ^= 0xFF
+    leaf.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        restore_checkpoint(tmp_path, tree)
+
+
+def test_structure_mismatch_detected(tmp_path, tree):
+    save_checkpoint(tmp_path, 1, tree)
+    other = {"w": jnp.zeros((3, 4))}
+    with pytest.raises(AssertionError):
+        restore_checkpoint(tmp_path, other)
+
+
+def test_atomic_save_interrupted(tmp_path, tree):
+    """A leftover .tmp dir must not shadow the last good checkpoint."""
+    save_checkpoint(tmp_path, 1, tree)
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert latest_step(tmp_path) == 1
+    restored, step, _ = restore_checkpoint(tmp_path, tree)
+    assert step == 1
+
+
+def test_elastic_restore_with_shardings(tmp_path, tree):
+    """Restore under explicit (single-device) shardings — the elastic
+    path used when the mesh shape changes between runs."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    save_checkpoint(tmp_path, 2, tree)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+    sh = jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, P(*([None] * jnp.asarray(leaf).ndim))), tree)
+    restored, step, _ = restore_checkpoint(tmp_path, tree, shardings=sh)
+    assert step == 2
+    for leaf in jax.tree.leaves(restored):
+        assert leaf.sharding is not None
+
+
+def test_run_with_restarts_recovers():
+    log = []
+    state0 = {"x": 0.0}
+
+    def make_state():
+        return dict(state0), 0
+
+    saved = {}
+
+    def save_fn(state, step):
+        saved["state"], saved["step"] = dict(state), step
+
+    def restore_fn():
+        if not saved:
+            return None
+        return dict(saved["state"]), saved["step"]
+
+    fails = {7: "node_failure", 13: "nan_loss"}
+    seen = set()
+
+    def train_one(state, step):
+        if step in fails and step not in seen:
+            seen.add(step)
+            raise TrainingFault(fails[step])
+        state = {"x": state["x"] + 1.0}
+        return state, {"loss": 1.0 / (step + 1)}
+
+    state, step, events = run_with_restarts(
+        make_state, train_one, n_steps=20, save_fn=save_fn,
+        restore_fn=restore_fn, policy=RestartPolicy(max_restarts=5),
+        ckpt_every=5)
+    assert step == 20
+    kinds = [e["kind"] for e in events]
+    assert kinds.count("fault") == 2
+    assert "skip_batch" in kinds       # nan batch skipped after restart
+
+
+def test_restart_budget_exhausted():
+    def make_state():
+        return {}, 0
+
+    def train_one(state, step):
+        raise TrainingFault("node_failure")
+
+    with pytest.raises(TrainingFault):
+        run_with_restarts(make_state, train_one, n_steps=5,
+                          save_fn=lambda *a: None,
+                          restore_fn=lambda: None,
+                          policy=RestartPolicy(max_restarts=2))
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(8, threshold=4.0, patience=2)
+    rng = np.random.default_rng(0)
+    for s in range(8):
+        times = list(0.1 + rng.normal(0, 0.002, 8))
+        if s >= 3:
+            times[5] += 0.05
+        mon.observe(times)
+    assert 5 in mon.flagged
+    assert len(mon.flagged) == 1

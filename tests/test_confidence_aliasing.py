@@ -1,0 +1,87 @@
+import numpy as np
+
+from repro.core import (ToolSpec, confidence_window, delta_e_over_delta_t,
+                        fft_analysis, min_attributable_phase_s,
+                        nyquist_limit_hz, simulate_sensor, square_wave,
+                        steady_state, transition_detection_error)
+from repro.core.characterization import StepResponse, step_response
+from repro.core.measurement_model import chip_energy_sensor, pm_chip_sensor
+from repro.core.reconstruction import power_trace_series
+
+
+def _resp(d=0.01, r=0.02, f=0.03):
+    return StepResponse(d, r, f, 55.0, 215.0, 10)
+
+
+def test_confidence_window_eq1():
+    w = confidence_window(1.0, 2.0, _resp())
+    assert abs(w.t_lo - 1.03) < 1e-9
+    assert abs(w.t_hi - 1.96) < 1e-9
+    assert not w.empty
+
+
+def test_short_phase_empty_window():
+    w = confidence_window(1.0, 1.05, _resp())
+    assert w.empty
+    assert min_attributable_phase_s(_resp()) > 0.05
+
+
+def test_steady_state_within_window():
+    truth = square_wave(2.0, 3, lead_s=1.0, tail_s=1.0)
+    tr = simulate_sensor(chip_energy_sensor(0), ToolSpec(1e-3), truth)
+    s = delta_e_over_delta_t(tr)
+    eu, ed = truth.times[1:-1:2], truth.times[2:-1:2]
+    resp = step_response(s, eu, ed)
+    st = steady_state(s, float(eu[0]), float(ed[0]), resp)
+    assert st.reliable
+    assert abs(st.mean_w - 215.0) < 5.0
+
+
+def test_pm_cannot_attribute_short_phases():
+    """100 ms PM sensors have empty windows for <0.5 s phases once their
+    response/recovery are accounted for — the paper's motivation."""
+    truth = square_wave(0.6, 6, lead_s=1.0, tail_s=1.0)
+    tr = simulate_sensor(pm_chip_sensor(0, False), ToolSpec(1e-3), truth)
+    s = power_trace_series(tr)
+    eu, ed = truth.times[1:-1:2], truth.times[2:-1:2]
+    resp = step_response(s, eu, ed)
+    w = confidence_window(float(eu[0]), float(eu[0]) + 0.3, resp)
+    assert w.empty or w.width < 0.05
+
+
+def test_nyquist():
+    assert nyquist_limit_hz(1e-3) == 500.0
+
+
+def test_aliasing_monotone_with_period():
+    """Detection error grows as the period shrinks below the tool limit."""
+    def run(period):
+        truth = square_wave(period, max(6, int(1.0 / period)),
+                            lead_s=0.2, tail_s=0.2)
+        tr = simulate_sensor(
+            chip_energy_sensor(0),
+            ToolSpec(1e-3, n_sensors_polled=24), truth, seed=5)
+        s = delta_e_over_delta_t(tr)
+        return transition_detection_error(s, truth.times[1:-1]).error_rate
+
+    slow, mid, fast = run(0.1), run(0.004), run(0.002)
+    assert slow < 0.05
+    assert fast > mid - 0.05
+    assert fast > 0.3
+
+
+def test_fft_folding():
+    # well-sampled: peak at the true frequency; undersampled: folded
+    truth = square_wave(0.1, 40, lead_s=0.1, tail_s=0.1)   # 10 Hz
+    tr = simulate_sensor(chip_energy_sensor(0), ToolSpec(1e-3), truth)
+    s = delta_e_over_delta_t(tr)
+    spec = fft_analysis(s, true_freq_hz=10.0)
+    assert not spec.folded
+    assert abs(spec.peak_hz - 10.0) < 1.5
+
+    truth = square_wave(0.004, 500, lead_s=0.1, tail_s=0.1)  # 250 Hz
+    tr = simulate_sensor(chip_energy_sensor(0),
+                         ToolSpec(1e-3, n_sensors_polled=24), truth, seed=2)
+    s = delta_e_over_delta_t(tr)
+    spec = fft_analysis(s, true_freq_hz=250.0)
+    assert spec.folded or spec.noise_floor_ratio > 1e-4

@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+
+from repro.core import (PowerSeries, ToolSpec, delta_e_over_delta_t,
+                        simulate_sensor, square_wave, unwrap_counter)
+from repro.core.measurement_model import SensorSpec, chip_energy_sensor
+from repro.core.reconstruction import invert_moving_average
+
+
+def test_unwrap_counter_roundtrip():
+    rng = np.random.default_rng(0)
+    true = np.cumsum(rng.uniform(0, 10, 500))
+    bits, quantum = 8, 1.0
+    wrapped = np.mod(np.floor(true / quantum), 2 ** bits) * quantum
+    rec = unwrap_counter(wrapped, bits, quantum)
+    assert np.max(np.abs(rec - np.floor(true))) < 1.0
+
+
+def test_wraparound_power_continuity():
+    """A wrapping counter must not produce negative power spikes."""
+    truth = square_wave(0.5, 4, lead_s=0.2, tail_s=0.2)
+    spec = SensorSpec("e", "chip", "energy_cum", quantum=1e-6,
+                      wrap_bits=26)       # wraps every ~0.3 s at 215 W
+    tr = simulate_sensor(spec, ToolSpec(1e-3), truth)
+    s = delta_e_over_delta_t(tr)
+    assert np.min(s.watts) > -1.0
+    assert np.max(s.watts) < 400.0
+
+
+def test_dedup_repeated_publications():
+    """Reading faster than the driver refresh must not fabricate zeros."""
+    truth = square_wave(1.0, 2, lead_s=0.3, tail_s=0.3)
+    spec = SensorSpec("e", "chip", "energy_cum", quantum=1e-6,
+                      production_interval_s=10e-3, driver_refresh_s=10e-3)
+    tr = simulate_sensor(spec, ToolSpec(1e-3), truth)   # 10x oversampled
+    s = delta_e_over_delta_t(tr)
+    active = (s.t > truth.times[1] + 0.2) & (s.t < truth.times[2] - 0.05)
+    assert np.all(s.watts[active] > 100.0)   # no zero-power artifacts
+
+
+def test_steady_state_accuracy():
+    truth = square_wave(2.0, 3, lead_s=1.0, tail_s=1.0)
+    tr = simulate_sensor(chip_energy_sensor(0), ToolSpec(1e-3), truth)
+    s = delta_e_over_delta_t(tr)
+    m = (s.t > truth.times[1] + 0.2) & (s.t < truth.times[2] - 0.2)
+    assert abs(np.mean(s.watts[m]) - 215.0) < 3.0
+
+
+def test_energy_between_matches_counter():
+    truth = square_wave(2.0, 3, lead_s=1.0, tail_s=1.0)
+    tr = simulate_sensor(chip_energy_sensor(0), ToolSpec(1e-3), truth)
+    s = delta_e_over_delta_t(tr)
+    e_est = s.energy_between(2.0, 5.0)
+    e_true = truth.energy_between(2.0, 5.0)
+    assert abs(e_est - e_true) / e_true < 0.02
+
+
+def test_invert_moving_average():
+    rng = np.random.default_rng(1)
+    t = np.arange(2000) * 1e-3
+    x = np.where((t // 0.25).astype(int) % 2 == 0, 60.0, 210.0)
+    k = 50
+    y = np.convolve(x, np.ones(k) / k, mode="full")[:len(x)]
+    rec = invert_moving_average(PowerSeries(t, y), window_s=k * 1e-3)
+    # inversion recovers the sharp signal away from the initial transient
+    err = np.abs(rec.watts[3 * k:] - x[3 * k:])
+    assert np.percentile(err, 90) < 1.0

@@ -1,0 +1,96 @@
+"""The simulator's claims are falsifiable: blind characterization must
+recover the configured sensor parameters."""
+import numpy as np
+import pytest
+
+from repro.core import (NodeFabric, ToolSpec, characterize_sensor,
+                        delta_e_over_delta_t, power_trace_series,
+                        simulate_sensor, square_wave)
+from repro.core.measurement_model import (chip_energy_sensor,
+                                          chip_power_avg_sensor,
+                                          chip_power_inst_sensor,
+                                          pm_chip_sensor, expected_lag_s)
+
+
+@pytest.fixture(scope="module")
+def wave():
+    return square_wave(2.0, 4, lead_s=1.5, tail_s=1.5)
+
+
+def edges(truth):
+    return truth.times[1:-1:2], truth.times[2:-1:2]
+
+
+def test_energy_counter_update_interval_recovered(wave):
+    spec = chip_energy_sensor(0)
+    tr = simulate_sensor(spec, ToolSpec(sample_interval_s=2e-4), wave)
+    rec = characterize_sensor(tr, *edges(wave))
+    med = rec["update_intervals"]["published"]["median"]
+    assert abs(med - spec.production_interval_s) < 0.5e-3
+
+
+def test_pm_update_interval_recovered(wave):
+    spec = pm_chip_sensor(1, on_nic_rail=False)
+    tr = simulate_sensor(spec, ToolSpec(sample_interval_s=1e-3), wave)
+    rec = characterize_sensor(tr, *edges(wave))
+    med = rec["update_intervals"]["published"]["median"]
+    assert abs(med - 0.1) < 0.03
+
+
+def test_derived_power_fast_response(wave):
+    """ΔE/Δt must respond within a few ms (the paper's headline claim)."""
+    tr = simulate_sensor(chip_energy_sensor(0), ToolSpec(1e-3), wave)
+    rec = characterize_sensor(tr, *edges(wave))
+    sr = rec["step_response"]
+    assert sr["rise_s"] < 0.02
+    assert sr["fall_s"] < 0.02
+    assert abs(sr["active_w"] - 215.0) < 10
+    assert abs(sr["idle_w"] - 55.0) < 5
+
+
+def test_averaged_power_is_slow(wave):
+    """The MA-filtered counter must smear the 1 s transition (Fig. 5a)."""
+    spec = chip_power_avg_sensor(0, window_s=1.5)
+    tr = simulate_sensor(spec, ToolSpec(1e-3), wave)
+    s = power_trace_series(tr)
+    m = (s.t > wave.times[1] + 0.85) & (s.t < wave.times[2] - 0.01)
+    # after ~0.9 s of a 1 s active phase the MA still hasn't reached 90%
+    assert np.mean(s.watts[m]) < 55 + 0.9 * (215 - 55)
+
+
+def test_iir_power_rise_matches_tau(wave):
+    spec = chip_power_inst_sensor(0, tau_s=0.5)
+    tr = simulate_sensor(spec, ToolSpec(1e-3), wave)
+    rec = characterize_sensor(tr, *edges(wave))
+    rise = rec["step_response"]["rise_s"]
+    # 10-90% rise of a 1-pole IIR = ln(9) * tau ~= 2.2 * tau(=w/3)
+    expect = 2.2 * spec.filter_window_s
+    assert 0.5 * expect < rise < 2.0 * expect
+
+
+def test_reads_never_precede_measurements(wave):
+    for spec in [chip_energy_sensor(0), pm_chip_sensor(0, True)]:
+        tr = simulate_sensor(spec, ToolSpec(1e-3), wave)
+        lag = tr.t_read - tr.t_measured
+        assert np.median(lag) > 0
+        assert np.median(lag) < 10 * expected_lag_s(spec, ToolSpec(1e-3))
+
+
+def test_tool_overhead_widens_observation(wave):
+    """Polling 24 sensors stretches t_read spacing (paper §V-A1)."""
+    spec = chip_energy_sensor(0)
+    fast = simulate_sensor(spec, ToolSpec(1e-3, n_sensors_polled=1), wave)
+    slow = simulate_sensor(spec, ToolSpec(1e-3, n_sensors_polled=24), wave)
+    # 24 sensors x 12 us/read stretch 1 ms polling to ~1.29 ms (§V-A1)
+    assert np.median(np.diff(slow.t_read)) > \
+        1.15 * np.median(np.diff(fast.t_read))
+
+
+def test_node_power_composition(wave):
+    fabric = NodeFabric(chip_truths=[wave] * 4)
+    traces = fabric.sample_all(ToolSpec(1e-3), seed=0)
+    node = power_trace_series(traces["pm_node_power"])
+    m = (node.t > 1.8) & (node.t < 2.4)       # inside an active half-cycle
+    val = np.mean(node.watts[m])
+    # 4 chips @215 * 1.07 + cpu + ddr + nics > 4*215; sanity band
+    assert 950 < val < 1500

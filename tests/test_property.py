@@ -1,0 +1,84 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PiecewisePower, square_wave, unwrap_counter
+from repro.core.power_model import occupancy_power
+from repro.core.reconstruction import PowerSeries
+
+
+@st.composite
+def piecewise(draw):
+    n = draw(st.integers(2, 30))
+    steps = draw(st.lists(st.floats(1e-3, 2.0), min_size=n, max_size=n))
+    watts = draw(st.lists(st.floats(0.0, 500.0), min_size=n, max_size=n))
+    times = np.concatenate([[0.0], np.cumsum(steps)])
+    return PiecewisePower(times, np.asarray(watts))
+
+
+@given(piecewise(), st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+       st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_energy_additivity(pp, f1, f2, f3):
+    """∫[a,c] = ∫[a,b] + ∫[b,c] for any a<=b<=c."""
+    span = pp.t1 - pp.t0
+    pts = sorted([pp.t0 + f * span for f in (f1, f2, f3)])
+    a, b, c = pts
+    e_ac = pp.energy_between(a, c)
+    e_ab = pp.energy_between(a, b)
+    e_bc = pp.energy_between(b, c)
+    assert abs(e_ac - (e_ab + e_bc)) < 1e-6 * max(abs(e_ac), 1.0) + 1e-9
+
+
+@given(piecewise())
+@settings(max_examples=40, deadline=None)
+def test_energy_bounds(pp):
+    """min(P)*T <= E <= max(P)*T."""
+    e = pp.energy_between(pp.t0, pp.t1)
+    t = pp.t1 - pp.t0
+    assert pp.watts.min() * t - 1e-6 <= e <= pp.watts.max() * t + 1e-6
+
+
+@given(st.integers(4, 12), st.integers(10, 400), st.floats(0.5, 100.0))
+@settings(max_examples=40, deadline=None)
+def test_unwrap_inverse(bits, n, rate):
+    rng = np.random.default_rng(bits * n)
+    inc = rng.uniform(0, rate, n)
+    period = 2.0 ** bits
+    # keep increments below half a period (unwrap precondition)
+    inc = np.minimum(inc, 0.45 * period)
+    true = np.cumsum(inc)
+    wrapped = np.mod(true, period)
+    rec = unwrap_counter(wrapped, bits, 1.0)
+    np.testing.assert_allclose(rec, true, atol=1e-6 * max(true.max(), 1.0))
+
+
+@given(st.floats(0.0, 10.0), st.floats(0.0, 10.0), st.floats(0.0, 10.0))
+@settings(max_examples=60, deadline=None)
+def test_occupancy_power_bounds(c, m, x):
+    p = occupancy_power(c, m, x)
+    assert 55.0 - 1e-9 <= p <= 215.0 + 1e-9
+    # bottleneck unit at meaningful duty: power strictly above idle
+    if max(c, m, x) > 1e-3:
+        assert p > 55.0
+
+
+@given(st.integers(2, 50), st.floats(1e-4, 1e-2))
+@settings(max_examples=30, deadline=None)
+def test_powerseries_energy_consistency(n, dt):
+    rng = np.random.default_rng(n)
+    t = np.cumsum(np.full(n, dt))
+    w = rng.uniform(0, 300, n)
+    s = PowerSeries(t, w)
+    total = s.energy_between(t[0], t[-1])
+    manual = float(np.sum(w[1:] * dt))
+    assert abs(total - manual) < 1e-6 * max(manual, 1.0) + 1e-9
+
+
+@given(st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_square_wave_energy_exact(n_cycles):
+    sw = square_wave(2.0, n_cycles, lead_s=1.0, tail_s=1.0)
+    e = sw.energy_between(sw.t0, sw.t1)
+    expect = (2.0 + n_cycles) * 55.0 + n_cycles * 215.0
+    assert abs(e - expect) < 1e-6

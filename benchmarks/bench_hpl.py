@@ -1,14 +1,11 @@
 """Paper Fig. 7 + §V-B2 table: rocHPL vs rocHPL-MxP stacked power and the
-energy-savings decomposition across simulated nodes."""
-import numpy as np
-
-from benchmarks.common import timed
-from examples.mixed_precision_study import energize
-from repro.core import split_energy_savings
+energy-savings decomposition across simulated nodes (fleet-batched)."""
+from benchmarks.common import smoke, timed
 from repro.hpl import hpl_mxp_solve, hpl_solve, make_dd_system, make_system
+from repro.hpl.energy import mxp_energy_report
 
-N_NODES = 8      # scaled stand-in for the paper's 128 nodes
-N = 320
+N_NODES = smoke(8, 2)    # scaled stand-in for the paper's 128 nodes
+N = smoke(320, 128)
 
 
 def run():
@@ -16,19 +13,12 @@ def run():
     _, full = hpl_solve(a, b, nb=64)
     ad, bd, _ = make_dd_system(N)
     _, mxp = hpl_mxp_solve(ad, bd, nb=64)
-    e_full, e_mxp = [], []
-    for node in range(N_NODES):
-        pe_f = energize(full["tracer"], seed=node)
-        pe_m = energize(mxp["tracer"], seed=node)
-        e_full.append(sum(p.energy_j for p in pe_f))
-        e_mxp.append(sum(p.energy_j for p in pe_m))
-    dec = split_energy_savings(energize(full["tracer"]),
-                               energize(mxp["tracer"]))
-    return {"full_j": (float(np.mean(e_full)), float(np.std(e_full))),
-            "mxp_j": (float(np.mean(e_mxp)), float(np.std(e_mxp))),
-            "saving": 1 - np.mean(e_mxp) / np.mean(e_full),
+    # all nodes' counters attribute through one batched fleet pipeline
+    rep = mxp_energy_report(full["tracer"], mxp["tracer"], N_NODES)
+    return {"full_j": rep["full_j"], "mxp_j": rep["mxp_j"],
+            "saving": rep["saving"],
             "residuals": (full["residual"], mxp["residual"]),
-            "dec": dec}
+            "dec": rep["decomposition"]}
 
 
 def main():

@@ -1,9 +1,20 @@
 """Shared benchmark utilities."""
+import os
 import sys
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+
+def smoke_mode() -> bool:
+    """True when running under ``run.py --smoke`` (CI bench job)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def smoke(full, small):
+    """Pick a benchmark size: ``full`` normally, ``small`` in smoke mode."""
+    return small if smoke_mode() else full
 
 
 def timed(fn, *args, repeat=1, **kw):

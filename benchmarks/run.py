@@ -1,7 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV after each bench's own report.
+
+  python benchmarks/run.py [--smoke] [--csv PATH] [--only NAME[,NAME...]]
+
+``--smoke`` caps iteration counts/sizes (via ``common.smoke``) so the CI
+bench job finishes in a few minutes; ``--csv`` additionally writes the
+summary CSV to a file (uploaded as a CI artifact).
 """
+import argparse
+import os
 import sys
 import traceback
 from pathlib import Path
@@ -15,6 +23,7 @@ BENCHES = [
     "bench_aliasing",           # Fig. 6
     "bench_fft_aliasing",       # Fig. 10
     "bench_reconstruction",     # §III-A2 + fastotf2 throughput
+    "bench_fleet",              # fleet batched vs per-trace numpy loop
     "bench_hpl",                # Fig. 7 + energy table
     "bench_hpg",                # Fig. 8
     "bench_overhead",           # §II-D <1% overhead
@@ -22,10 +31,30 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes/iteration caps for CI (<~3 min)")
+    ap.add_argument("--csv", default=None, metavar="PATH",
+                    help="also write the summary CSV to PATH")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # set BEFORE bench modules import common-driven size constants
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    benches = BENCHES
+    if args.only:
+        wanted = set(args.only.split(","))
+        unknown = wanted - set(BENCHES)
+        if unknown:
+            ap.error(f"unknown bench(es) {sorted(unknown)} "
+                     f"(known: {', '.join(BENCHES)})")
+        benches = [b for b in BENCHES if b in wanted]
+
     csv = ["name,us_per_call,derived"]
     failures = 0
-    for name in BENCHES:
+    for name in benches:
         print(f"\n{'='*72}\n== benchmarks.{name}\n{'='*72}")
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
@@ -35,7 +64,11 @@ def main() -> None:
             traceback.print_exc()
             csv.append(f"{name},-1,FAILED")
             failures += 1
-    print("\n" + "\n".join(csv))
+    text = "\n".join(csv)
+    print("\n" + text)
+    if args.csv:
+        Path(args.csv).write_text(text + "\n")
+        print(f"(csv written to {args.csv})")
     if failures:
         raise SystemExit(1)
 

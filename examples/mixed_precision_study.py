@@ -7,38 +7,11 @@ per-phase energy, and prints the savings decomposition.
 
   PYTHONPATH=src python examples/mixed_precision_study.py
 """
-import numpy as np
-
-from repro.core import (NodeFabric, ToolSpec, attribute_energy,
-                        phase_power, split_energy_savings)
-from repro.core.measurement_model import CHIP_IDLE_W
-from repro.core.power_model import occupancy_power
-from repro.core.tracing import RegionTracer
+from repro.core import split_energy_savings
 from repro.hpl import (hpg_solve, hpl_mxp_solve, hpl_solve, make_dd_system,
                        make_poisson, make_system)
-
-# phase -> roofline occupancy (compute, memory, collective)
-OCC = {
-    "hpl_factorize": (1.0, 0.45, 0.1), "mxp_factorize": (1.0, 0.5, 0.1),
-    "hpl_solve": (0.3, 1.0, 0.0), "mxp_refine": (0.3, 1.0, 0.0),
-    "hpl_verify": (0.5, 1.0, 0.0),
-    "hpg_setup": (0.0, 0.5, 0.0), "hpg_krylov": (0.25, 1.0, 0.1),
-    "hpg_finalize": (0.1, 0.8, 0.0),
-}
-
-
-def energize(tracer: RegionTracer, n_chips=4, seed=0):
-    """Synthesize the sensor fabric over the traced phases and attribute."""
-    phases = tracer.phases(depth=0)
-    lead = 0.05
-    shifted = [(n, a + lead, b + lead) for n, a, b in phases]
-    watts = {n: {"watts": occupancy_power(*OCC.get(n, (0, 0.1, 0)))}
-             for n, _, _ in shifted}
-    truth = phase_power([("__lead__", 0.0, lead)] + shifted,
-                        {**watts, "__lead__": {"watts": CHIP_IDLE_W}})
-    fabric = NodeFabric(chip_truths=[truth] * n_chips)
-    traces = fabric.sample_all(ToolSpec(), seed=seed)
-    return attribute_energy(traces["chip0_energy"], shifted)
+# energy accounting lives in repro.hpl.energy; fleet_energize batches nodes
+from repro.hpl.energy import OCC, energize  # noqa: F401
 
 
 def main():

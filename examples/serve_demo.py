@@ -2,13 +2,11 @@
 
   PYTHONPATH=src python examples/serve_demo.py
 """
-import dataclasses
-
 import jax
 import numpy as np
 
 from repro.configs import ARCHS, reduced
-from repro.core import NodeFabric, ToolSpec, attribute_energy, phase_power
+from repro.core import NodeFabric, ToolSpec, phase_power
 from repro.core.measurement_model import CHIP_IDLE_W
 from repro.core.power_model import occupancy_power
 from repro.models import Model
@@ -42,13 +40,20 @@ def main():
                         {**watts, "__lead__": {"watts": CHIP_IDLE_W}})
     fabric = NodeFabric(chip_truths=[truth] * 4)
     traces = fabric.sample_all(ToolSpec(), seed=0)
-    pe = attribute_energy(traces["chip0_energy"], shifted)
+    # attribute ALL on-chip counters through one batched fleet call,
+    # shifting the tracer timebase onto the synthesized fabric's lead-in
+    # (pm_accel*_energy tray counters measure the same chips upstream —
+    # including them would double-count)
+    chip_traces = {n: tr for n, tr in traces.items()
+                   if tr.spec.is_cumulative and n.startswith("chip")}
+    per_trace = engine.attribute_phases(chip_traces, t_shift=lead)
     agg = {}
-    for p in pe:
-        a = agg.setdefault(p.phase, [0.0, 0.0])
-        a[0] += p.energy_j
-        a[1] += p.t_end - p.t_start
-    print("\nper-phase serving energy (chip0 ΔE/Δt):")
+    for pe in per_trace.values():
+        for p in pe:
+            a = agg.setdefault(p.phase, [0.0, 0.0])
+            a[0] += p.energy_j
+            a[1] += p.t_end - p.t_start
+    print("\nper-phase serving energy (all chips, fleet ΔE/Δt):")
     for name, (e, t) in sorted(agg.items()):
         print(f"  {name:10s} {e:9.2f} J  {t:7.3f} s  {e/max(t,1e-9):7.1f} W")
 

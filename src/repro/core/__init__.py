@@ -38,6 +38,7 @@ from repro.core.tracing import LiveSampler, RegionTracer  # noqa: F401
 from repro.core.trace_format import (load_trace, merge_traces,  # noqa: F401
                                      save_trace)
 from repro.core.attribution import (PhaseEnergy, attribute_energy,  # noqa
+                                    attribute_energy_many,
                                     attribute_power_series,
                                     energy_conservation_residual,
                                     split_energy_savings,

@@ -74,6 +74,35 @@ def attribute_energy(trace: SensorTrace, phases, *, resp: StepResponse = None,
     return out
 
 
+def attribute_energy_many(traces, phases, *, corrections=None,
+                          use_fleet: bool = True, chunk: int = 1024,
+                          interpret=None) -> list:
+    """Per-phase energy for MANY traces -> one [PhaseEnergy] list each.
+
+    Cumulative-energy traces route through the batched fleet subsystem
+    (one padded reconstruct + streamed chunked integration); power sensors
+    and ``use_fleet=False`` fall back to the per-trace host loop, which
+    stays the parity oracle (tests pin fleet == host).
+    """
+    traces = list(traces)
+    if not use_fleet:
+        return [attribute_energy(tr, phases, corrections=corrections)
+                for tr in traces]
+    from repro.fleet import attribute_energy_fleet
+    cum = [i for i, tr in enumerate(traces) if tr.spec.is_cumulative]
+    out = [None] * len(traces)
+    if cum:
+        rows = attribute_energy_fleet([traces[i] for i in cum], phases,
+                                      corrections=corrections, chunk=chunk,
+                                      interpret=interpret)
+        for i, row in zip(cum, rows):
+            out[i] = row
+    for i, tr in enumerate(traces):
+        if out[i] is None:
+            out[i] = attribute_energy(tr, phases, corrections=corrections)
+    return out
+
+
 def attribute_power_series(trace: SensorTrace, phases,
                            *, corrections=None) -> dict:
     """Reconstructed (ΔE/Δt) power per phase — for stacked plots (Fig. 7/8)."""
@@ -107,22 +136,34 @@ def energy_conservation_residual(trace: SensorTrace, phases) -> float:
     return abs(float(np.sum(parts) - total)) / max(abs(total), 1e-12)
 
 
-def stacked_node_power(traces: dict, grid, *, corrections=None) -> dict:
+def stacked_node_power(traces: dict, grid, *, corrections=None,
+                       use_fleet: bool = True) -> dict:
     """Per-component power matrix on a common grid (Fig. 7/8 stacked view).
 
     Returns {"grid": grid, components: {name: watts}} with chips from
     ΔE/Δt-reconstructed on-chip counters and CPU/memory from PM sensors.
+    All chip counters reconstruct in one batched fleet call; pass
+    ``use_fleet=False`` for the per-trace host path (parity oracle).
     """
     comps = {}
+    chip_traces = []
     for name, tr in traces.items():
-        tr = apply_corrections(tr, corrections)
         if tr.spec.is_cumulative and tr.name.startswith("chip"):
-            s = delta_e_over_delta_t(tr)
+            if use_fleet:
+                chip_traces.append(tr)
+                continue
+            s = delta_e_over_delta_t(apply_corrections(tr, corrections))
         elif tr.name in ("pm_cpu_power", "pm_memory_power"):
-            s = power_trace_series(tr)
+            s = power_trace_series(apply_corrections(tr, corrections))
         else:
             continue
         comps[name] = s.resample(grid).watts
+    if chip_traces:
+        from repro.fleet import fleet_power_series
+        for tr, s in zip(chip_traces,
+                         fleet_power_series(chip_traces,
+                                            corrections=corrections)):
+            comps[tr.name] = s.resample(grid).watts
     return {"grid": np.asarray(grid), "components": comps}
 
 

@@ -96,10 +96,10 @@ def decode_attention(q, ck, cv, pos, mesh, *, window=0, logit_cap=0.0,
         # single-shard fallback (smoke tests / non-divisible caches)
         return fn(q, ck, cv, pos)
 
+    from repro.distributed.sharding import shard_map_compat
     kv_spec = P(bspec, seq_axis)
-    return jax.shard_map(
+    return shard_map_compat(
         fn, mesh=mesh,
         in_specs=(P(bspec), kv_spec, kv_spec, P()),
         out_specs=P(bspec),
-        check_vma=False,
     )(q, ck, cv, pos)

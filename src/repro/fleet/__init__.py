@@ -1,0 +1,28 @@
+"""Fleet-scale streaming reconstruction + attribution (paper §V at scale).
+
+The paper's headline capability is attribution *at scale* — characterizing
+and correcting sensors across 512 GPUs / 480 APUs simultaneously.  This
+subsystem is the batched counterpart of ``repro.core.reconstruction`` /
+``repro.core.attribution``:
+
+  packing    — ragged (node × device) SensorTraces -> padded (fleet, S)
+               arrays with validity masks (pure memcpy, no per-trace math)
+  reconstruct— dedup -> unwrap -> ΔE/Δt for the whole fleet in ONE jitted
+               call through the ``power_reconstruct`` Pallas kernel
+  streaming  — online, chunked per-phase energy accumulation through the
+               ``phase_integrate`` Pallas kernel: O(fleet × chunk) device
+               memory regardless of run length
+  api        — trace-level entry points mirroring the per-trace host API
+               (which remains the parity oracle)
+
+Every future scaling PR (sharding, async ingest, multi-node) composes with
+the padded-fleet interface here instead of per-trace Python loops.
+"""
+from repro.fleet.packing import (PackedFleet, pack_traces,  # noqa: F401
+                                 unpack_series)
+from repro.fleet.reconstruct import (fleet_reconstruct,  # noqa: F401
+                                     fleet_reconstruct_host)
+from repro.fleet.streaming import (FleetStream,  # noqa: F401
+                                   StreamingPhaseAccumulator)
+from repro.fleet.api import (attribute_energy_fleet,  # noqa: F401
+                             fleet_power_series)

@@ -1,0 +1,71 @@
+"""Trace-level fleet entry points mirroring the per-trace host API.
+
+``fleet_power_series`` replaces ``[delta_e_over_delta_t(tr) for tr in ...]``
+and ``attribute_energy_fleet`` replaces ``[attribute_energy(tr, phases)
+for tr in ...]`` for cumulative-energy traces; the host loops remain the
+parity oracles (tests pin fleet == host).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.calibration import apply_corrections
+from repro.fleet.packing import pack_traces, unpack_series
+from repro.fleet.reconstruct import fleet_reconstruct
+from repro.fleet.streaming import FleetStream
+
+
+def fleet_power_series(traces, *, use_t_measured: bool = True,
+                       interpret=None, use_kernel: bool = True,
+                       corrections=None, dtype=np.float32):
+    """Batched ΔE/Δt for many cumulative-energy traces -> [PowerSeries].
+
+    One pack (memcpy) + one jitted fleet call, any trace count/lengths.
+    """
+    traces = [apply_corrections(tr, corrections) for tr in traces]
+    for tr in traces:
+        assert tr.spec.is_cumulative, \
+            f"{tr.name} is not an energy counter (fleet ΔE/Δt path)"
+    packed = pack_traces(traces, use_t_measured=use_t_measured, dtype=dtype)
+    power, times, valid = fleet_reconstruct(packed, interpret=interpret,
+                                            use_kernel=use_kernel)
+    return unpack_series(packed, power, times, valid)
+
+
+def attribute_energy_fleet(traces, phases, *, corrections=None,
+                           chunk: int = 1024, interpret=None,
+                           use_kernel: bool = True, dtype=np.float32):
+    """Per-phase energy for many cumulative traces in streamed chunks.
+
+    phases: [(name, t_start, t_end)].  Returns one ``[PhaseEnergy]`` list
+    per input trace (same shape as looping ``attribute_energy``), computed
+    as reconstruct+integrate over fixed-size windows: device memory stays
+    O(fleet × chunk) however long the traces are.
+    """
+    from repro.core.attribution import PhaseEnergy
+    traces = [apply_corrections(tr, corrections) for tr in traces]
+    if not phases:                       # host-path parity: empty rows
+        return [[] for _ in traces]
+    for tr in traces:
+        assert tr.spec.is_cumulative, \
+            f"{tr.name} is not an energy counter (fleet ΔE/Δt path)"
+    packed = pack_traces(traces, dtype=dtype)
+    # packed times are rebased to the fleet origin; shift windows to match
+    windows = [(a - packed.t0, b - packed.t0) for _, a, b in phases]
+    stream = FleetStream(windows, packed.shape[0],
+                         wrap_period=packed.wrap_period,
+                         dtype=dtype, interpret=interpret,
+                         use_kernel=use_kernel)
+    s = packed.shape[1]
+    for lo in range(0, s, chunk):
+        hi = min(lo + chunk, s)
+        stream.update(packed.times[:, lo:hi], packed.energy[:, lo:hi])
+    totals = stream.totals()
+    out = []
+    for i in range(packed.n_traces):
+        row = []
+        for (name, a, b), e in zip(phases, totals[i]):
+            dur = max(b - a, 1e-12)
+            row.append(PhaseEnergy(name, a, b, float(e), float(e / dur)))
+        out.append(row)
+    return out

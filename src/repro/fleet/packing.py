@@ -1,0 +1,140 @@
+"""Ragged-trace packing: many (node × device) streams -> one padded fleet.
+
+``pack_traces`` does NO per-trace numerics — dedup/unwrap/monotonic
+filtering all happen inside the jitted fleet call (`fleet/reconstruct.py`)
+so the host-side ingest cost is a straight memcpy into the padded arrays.
+
+Padding convention: each row's tail replicates the trace's last sample.
+Replicated samples have an unchanged ``t_measured`` so the in-jit dedup
+stage drops them for free; they also produce zero-width sample-and-hold
+intervals, so the streaming attributor accumulates exactly zero energy
+from padding without ever consulting the mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.reconstruction import unwrap_counter
+
+# power_reconstruct tiles rows in blocks of 8; keep the fleet axis aligned.
+ROW_ALIGN = 8
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class PackedFleet:
+    """Padded fleet of sensor streams + per-row metadata.
+
+    energy/times: (F, S) with F a multiple of ROW_ALIGN; rows beyond
+    ``n_traces`` are all-padding.  ``valid[i, j]`` is True for the j-th raw
+    sample of trace i (before any dedup — dedup is the device's job);
+    it is always a per-row prefix of ``n_samples[i]`` and is materialized
+    lazily (the fast reconstruction path only needs the counts).
+    ``wrap_period[i]`` is the counter period in value units (0 = no wrap).
+
+    Values are stored UNWRAPPED and REBASED so float32 keeps its
+    precision where the signal lives: counters are wrap-corrected in
+    float64 at ingest, then shifted by the row's first sample (energy)
+    and one fleet-wide ``t0`` (time — shared so phase windows shift by a
+    single scalar).  Packed energy therefore spans only the traversed ΔE
+    and ``wrap_period`` is 0.  A counter that has been running for days
+    (absolute value ~1e7 J, timestamps ~1e4 s) would otherwise lose ΔE
+    and Δt entirely to float32 rounding.
+    """
+    energy: np.ndarray        # (F, S) cumulative J, rebased per row
+    times: np.ndarray         # (F, S) t_measured (or t_read), minus t0
+    n_samples: np.ndarray     # (F,) raw length per row
+    wrap_period: np.ndarray   # (F,) float
+    names: list               # len n_traces
+    n_traces: int
+    t0: float = 0.0           # fleet-wide time origin
+    e0: np.ndarray = None     # (F,) per-row energy baselines (float64)
+
+    @property
+    def shape(self):
+        return self.energy.shape
+
+    @property
+    def valid(self):
+        return np.arange(self.shape[1])[None, :] < self.n_samples[:, None]
+
+
+def pack_traces(traces, *, use_t_measured: bool = True,
+                dtype=np.float32, min_samples: int = 2,
+                out: PackedFleet = None) -> PackedFleet:
+    """Pack ragged SensorTraces into a padded (fleet, samples) block.
+
+    Rows are raw (duplicates and all); F is rounded up to ROW_ALIGN with
+    degenerate all-padding rows so the Pallas row-tiling constraint holds
+    for any trace count (1, 3, 17, ...).  Pass a previous ``out`` of the
+    same shape to reuse its buffers (streaming ingest ring-buffer style:
+    no per-batch allocation/page faulting).
+    """
+    traces = list(traces)
+    assert traces, "pack_traces needs at least one trace"
+    n = len(traces)
+    f = _round_up(n, ROW_ALIGN)
+    s = max(max(len(tr) for tr in traces), min_samples)
+
+    if out is not None and out.shape == (f, s) \
+            and out.energy.dtype == dtype:
+        energy, times = out.energy, out.times
+    else:
+        energy = np.zeros((f, s), dtype)
+        times = np.zeros((f, s), dtype)
+    n_samples = np.zeros((f,), np.int32)
+    wrap = np.zeros((f,), dtype)
+    e0 = np.zeros((f,), np.float64)
+    names = []
+    # rebase in float64 BEFORE the dtype cast: one shared time origin,
+    # one energy baseline per row (see PackedFleet docstring)
+    t0 = min(float((tr.t_measured if use_t_measured else tr.t_read)[0])
+             for tr in traces)
+    for i, tr in enumerate(traces):
+        k = len(tr)
+        t = (tr.t_measured if use_t_measured else tr.t_read)
+        v = tr.value
+        if tr.spec.wrap_bits:
+            # unwrap in float64 at ingest: packed energy then spans only
+            # the traversed ΔE, which float32 can hold (a huge-period
+            # counter that wraps mid-window cannot be rebased any other
+            # way without losing ΔE to rounding)
+            v = unwrap_counter(v, tr.spec.wrap_bits, tr.spec.quantum)
+        e0[i] = v[0]
+        energy[i, :k] = v - e0[i]
+        times[i, :k] = t - t0
+        if k < s:
+            # tail: replicate the last sample (dedup-invisible, zero-width)
+            energy[i, k:] = energy[i, k - 1]
+            times[i, k:] = times[i, k - 1]
+        n_samples[i] = k
+        names.append(tr.name)
+    # validity is a per-row prefix of n_samples (the fleet pipeline
+    # relies on this: interior holes are not part of the packing
+    # contract); PackedFleet.valid materializes it on demand
+    return PackedFleet(energy, times, n_samples, wrap, names, n,
+                       t0=t0, e0=e0)
+
+
+def unpack_series(packed: PackedFleet, power, times, valid_out):
+    """Fleet reconstruction output -> per-trace host PowerSeries list.
+
+    ``power/times/valid_out`` are the (F, S) arrays from
+    ``fleet_reconstruct``; rows beyond ``packed.n_traces`` are ignored.
+    """
+    from repro.core.reconstruction import PowerSeries
+    power = np.asarray(power)
+    times = np.asarray(times)
+    valid_out = np.asarray(valid_out)
+    out = []
+    for i in range(packed.n_traces):
+        m = valid_out[i]
+        out.append(PowerSeries(times[i][m].astype(np.float64) + packed.t0,
+                               power[i][m].astype(np.float64),
+                               source=packed.names[i]))
+    return out

@@ -1,3 +1,5 @@
 from repro.hpl.hpl import hpl_solve, make_system  # noqa: F401
 from repro.hpl.hpl_mxp import hpl_mxp_solve, make_dd_system  # noqa: F401
 from repro.hpl.hpg_mxp import hpg_solve, make_poisson  # noqa: F401
+from repro.hpl.energy import (energize, fleet_energize,  # noqa: F401
+                              mxp_energy_report)

@@ -7,6 +7,20 @@ interpret=True mode on CPU; on TPU the same BlockSpecs drive MXU/VMEM.
   squarewave        — calibrated FMA workload (the paper's §IV-B generator)
   power_reconstruct — dE/dt + wraparound over (devices x samples) traces
   phase_integrate   — segmented per-phase energy integration
+  fleet_attribute   — fused dE/dt + phase integration for streamed chunks
   flash_attention   — causal GQA flash attention (+gemma2 softcap)
   ssm_scan          — selective-scan (mamba) inner recurrence
 """
+
+
+def auto_block_rows(n_rows: int, block_rows, interpret: bool,
+                    compiled_rows: int = 8) -> int:
+    """Shared row-tiling policy for the fleet-facing kernels.
+
+    ``block_rows=None`` auto-sizes: ``compiled_rows``-row VMEM tiles when
+    compiled, the whole fleet in one grid step under interpret (per-step
+    emulation overhead dwarfs any tiling benefit there).
+    """
+    if block_rows is None:
+        block_rows = n_rows if interpret else compiled_rows
+    return min(block_rows, n_rows)

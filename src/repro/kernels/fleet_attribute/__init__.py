@@ -1,0 +1,1 @@
+from repro.kernels.fleet_attribute.ops import fleet_attribute  # noqa: F401

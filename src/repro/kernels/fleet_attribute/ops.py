@@ -1,0 +1,18 @@
+"""Public API: raw counter chunks -> per-phase energies, one fused pass."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.fleet_attribute.kernel import fleet_attribute_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def fleet_attribute(times, energy, wrap_row, phases, *,
+                    interpret: bool = False, use_kernel: bool = True):
+    if use_kernel:
+        return fleet_attribute_kernel(times, energy, wrap_row, phases,
+                                      interpret=interpret)
+    from repro.kernels.fleet_attribute.ref import fleet_attribute_ref
+    return fleet_attribute_ref(times, energy, wrap_row, phases)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused streaming-attribution kernel."""
+from repro.kernels.phase_integrate.ref import phase_energies_ref
+from repro.kernels.power_reconstruct.ref import reconstruct_power_rows_ref
+
+
+def fleet_attribute_ref(times, energy, wrap_row, phases):
+    """Composition of the two stage oracles the fused kernel replaces."""
+    power = reconstruct_power_rows_ref(energy, times, wrap_row)
+    return phase_energies_ref(times, power, phases)

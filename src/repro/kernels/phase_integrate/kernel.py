@@ -31,12 +31,16 @@ def _pi_kernel(t_ref, p_ref, ab_ref, o_ref):
     o_ref[...] = e.T                     # (R, Pb)
 
 
-def phase_integrate_kernel(times, watts, phases, *, block_rows: int = 8,
+def phase_integrate_kernel(times, watts, phases, *, block_rows=None,
                            block_phases: int = 32, interpret: bool = False):
-    """times/watts: (n_streams, S); phases: (P, 2) -> (n_streams, P)."""
+    """times/watts: (n_streams, S); phases: (P, 2) -> (n_streams, P).
+
+    ``block_rows=None`` auto-sizes via ``kernels.auto_block_rows``.
+    """
+    from repro.kernels import auto_block_rows
     n, s = times.shape
     p = phases.shape[0]
-    block_rows = min(block_rows, n)
+    block_rows = auto_block_rows(n, block_rows, interpret)
     block_phases = min(block_phases, p)
     assert n % block_rows == 0 and p % block_phases == 0
     grid = (n // block_rows, p // block_phases)

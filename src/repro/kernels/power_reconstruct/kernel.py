@@ -16,6 +16,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import auto_block_rows
+from repro.kernels.power_reconstruct.ref import wrapped_diff
+
 
 def _pr_kernel(e_ref, t_ref, o_ref, *, wrap_period: float):
     e = e_ref[...]
@@ -44,3 +47,98 @@ def power_reconstruct_kernel(energy, times, *, wrap_period: float = 0.0,
         out_shape=jax.ShapeDtypeStruct((n, s), energy.dtype),
         interpret=interpret,
     )(energy, times)
+
+
+def _pr_rows_kernel(e_ref, t_ref, w_ref, o_ref):
+    e = e_ref[...]
+    t = t_ref[...]
+    w = w_ref[...]                       # (R, 1) per-row period; 0 = none
+    de = wrapped_diff(e, w)
+    dt = t[:, 1:] - t[:, :-1]
+    p = de / jnp.maximum(dt, 1e-12)
+    o_ref[...] = jnp.pad(p, ((0, 0), (1, 0)))
+
+
+def _pr_fleet_kernel(e_ref, t_ref, w_ref, n_ref, p_ref, v_ref, r_ref):
+    e = e_ref[...]
+    t = t_ref[...]
+    w = w_ref[...]                       # (R, 1) per-row period; 0 = none
+    n = n_ref[...]                       # (R, 1) raw samples per row
+    rows, s = e.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (rows, s), 1)
+    valid = idx < n
+    # dedup + monotonic in one comparison: cached re-reads republish an
+    # unchanged (t, E) pair (==) and jitter can reorder timestamps (<) —
+    # keep iff t strictly advanced; slot 0 is kept when the row is live
+    adv = jnp.pad(t[:, 1:] > t[:, :-1], ((0, 0), (1, 0)),
+                  constant_values=True)
+    keep = valid & adv
+    de = wrapped_diff(e, w)
+    dt = t[:, 1:] - t[:, :-1]
+    p = jnp.pad(de / jnp.maximum(dt, 1e-12), ((0, 0), (1, 0)))
+    valid_out = keep & (idx >= 1)
+    p_ref[...] = jnp.where(valid_out, p, 0.0)
+    v_ref[...] = valid_out
+    # raw adjacent diffs only bridge duplicate runs when nothing is
+    # reordered — flag rows that need the carry-forward fallback
+    r_ref[...] = jnp.any(valid[:, 1:] & valid[:, :-1]
+                         & (t[:, 1:] < t[:, :-1]),
+                         axis=1, keepdims=True)
+
+
+def power_reconstruct_fleet_kernel(energy, times, wrap_row, n_row, *,
+                                   block_rows=None,
+                                   interpret: bool = False):
+    """Fused fleet front-end: dedup mask + wrap fix + ΔE/Δt in one pass.
+
+    energy/times: (n_streams, S) raw padded reads; wrap_row/n_row:
+    (n_streams, 1) per-row wrap period and raw sample count.  Returns
+    (power, valid, reordered): power[i, j] holds on (t[i, j-1], t[i, j]]
+    where valid; ``reordered[i]`` flags rows whose timestamps went
+    backwards (those need the carry-forward path — raw adjacent diffs
+    only bridge duplicate runs, which republish identical pairs).
+    """
+    n, s = energy.shape
+    block_rows = auto_block_rows(n, block_rows, interpret)
+    assert n % block_rows == 0
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _pr_fleet_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, s), energy.dtype),
+                   jax.ShapeDtypeStruct((n, s), jnp.bool_),
+                   jax.ShapeDtypeStruct((n, 1), jnp.bool_)],
+        interpret=interpret,
+    )(energy, times, wrap_row, n_row)
+
+
+def power_reconstruct_rows_kernel(energy, times, wrap_row, *,
+                                  block_rows=None,
+                                  interpret: bool = False):
+    """Heterogeneous-fleet variant: per-row counter wrap periods.
+
+    energy/times: (n_streams, S); wrap_row: (n_streams, 1) value-unit
+    periods (0 disables) -> power (n_streams, S); column 0 is 0.
+    ``block_rows=None`` auto-sizes via ``kernels.auto_block_rows``.
+    """
+    n, s = energy.shape
+    block_rows = auto_block_rows(n, block_rows, interpret)
+    assert n % block_rows == 0
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _pr_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s), energy.dtype),
+        interpret=interpret,
+    )(energy, times, wrap_row)

@@ -2,9 +2,46 @@
 import jax.numpy as jnp
 
 
+def wrapped_diff(e, wrap_row, xp=jnp):
+    """Per-row wrap-corrected ΔE along axis 1 (canonical definition).
+
+    The correction is reassociated as ``e_i + (w - e_{i-1})``: both
+    subtractions are Sterbenz-exact in float32, so ΔE never rounds at the
+    counter's full magnitude (a cumulative unwrap, or ``de + w``, would).
+    Shared by the Pallas kernels, the jnp oracles and (with ``xp=numpy``)
+    the float64 host mirror — one definition, no drift.
+    """
+    de = e[:, 1:] - e[:, :-1]
+    return xp.where((wrap_row > 0) & (de < -0.5 * wrap_row),
+                    e[:, 1:] + (wrap_row - e[:, :-1]), de)
+
+
 def reconstruct_power_ref(energy, times, *, wrap_period: float = 0.0):
     de = jnp.diff(energy, axis=1)
     if wrap_period > 0:
         de = jnp.where(de < -0.5 * wrap_period, de + wrap_period, de)
+    dt = jnp.maximum(jnp.diff(times, axis=1), 1e-12)
+    return jnp.pad(de / dt, ((0, 0), (1, 0)))
+
+
+def reconstruct_power_fleet_ref(energy, times, wrap_row, n_row):
+    """Oracle for the fused fleet front-end kernel."""
+    n, s = energy.shape
+    idx = jnp.arange(s, dtype=jnp.int32)[None, :]
+    valid = idx < n_row
+    adv = jnp.pad(times[:, 1:] > times[:, :-1], ((0, 0), (1, 0)),
+                  constant_values=True)
+    keep = valid & adv
+    power = reconstruct_power_rows_ref(energy, times, wrap_row)
+    valid_out = keep & (idx >= 1)
+    reordered = jnp.any(valid[:, 1:] & valid[:, :-1]
+                        & (times[:, 1:] < times[:, :-1]),
+                        axis=1, keepdims=True)
+    return jnp.where(valid_out, power, 0.0), valid_out, reordered
+
+
+def reconstruct_power_rows_ref(energy, times, wrap_row):
+    """Heterogeneous-fleet oracle: per-row wrap periods (n, 1); 0 = none."""
+    de = wrapped_diff(energy, wrap_row)
     dt = jnp.maximum(jnp.diff(times, axis=1), 1e-12)
     return jnp.pad(de / dt, ((0, 0), (1, 0)))

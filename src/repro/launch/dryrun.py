@@ -167,6 +167,8 @@ def lower_cell(arch_name, shape_name, *, multi_pod=False, compile_opts=None):
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax <= 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     acc = hlo_analyze(hlo)            # trip-count-aware (see hlo_costs.py)
     coll_by_type = acc["collectives"]

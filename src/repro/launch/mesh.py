@@ -7,7 +7,18 @@ one CPU device, while ``dryrun.py`` forces 512 placeholder host devices.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                       # jax >= 0.5: explicit/auto axis types
+    from jax.sharding import AxisType
+except ImportError:        # 0.4.x meshes are implicitly "auto"
+    AxisType = None
+
+
+def _mesh(devices, axes):
+    if AxisType is None:
+        return jax.sharding.Mesh(devices, axes)
+    return jax.sharding.Mesh(devices, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,9 +33,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, have {len(devices)}; "
             "run under launch/dryrun.py (XLA_FLAGS host device count)")
     import numpy as np
-    return jax.sharding.Mesh(
-        np.asarray(devices).reshape(shape), axes,
-        axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(np.asarray(devices).reshape(shape), axes)
 
 
 def make_local_mesh(shape=(1, 1), axes=("data", "model")):
@@ -34,6 +43,4 @@ def make_local_mesh(shape=(1, 1), axes=("data", "model")):
     for s in shape:
         n *= s
     devices = jax.devices()[:n]
-    return jax.sharding.Mesh(
-        np.asarray(devices).reshape(shape), axes,
-        axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(np.asarray(devices).reshape(shape), axes)

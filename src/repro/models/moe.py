@@ -166,10 +166,10 @@ def moe_apply(p, cfg, x, *, mesh=None, ep_axis="model",
                              "w_up": P(None, ep_axis),
                              "w_down": P(ep_axis, None)}
     x_spec = P(dp_axes if dp_axes else None, None, None)
-    y, aux = jax.shard_map(
+    from repro.distributed.sharding import shard_map_compat
+    y, aux = shard_map_compat(
         shard_fn, mesh=mesh,
         in_specs=(p_specs, x_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(p, x)
     return y, aux

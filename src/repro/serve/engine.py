@@ -91,3 +91,26 @@ class ServeEngine:
                     r.done = True
                     results[r.rid] = r.generated
         return results
+
+    def attribute_phases(self, traces, *, corrections=None, depth=0,
+                         t_shift=0.0, use_fleet=True, chunk=1024):
+        """Per-phase energy for the engine's recorded serving phases.
+
+        traces: {name: SensorTrace} (e.g. ``NodeFabric.sample_all``) or a
+        trace list.  ``t_shift`` maps the tracer timebase into the sensor
+        timebase (e.g. a synthesized fabric's lead-in).  All cumulative
+        counters batch through the fleet subsystem in one call; returns
+        {trace_name: [PhaseEnergy]} for dict input, or a list of
+        [PhaseEnergy] rows (input order) for list input — trace names
+        need not be unique there.
+        """
+        from repro.core.attribution import attribute_energy_many
+        phases = [(n, a + t_shift, b + t_shift)
+                  for n, a, b in self.tracer.phases(depth=depth)]
+        as_dict = isinstance(traces, dict)
+        trs = list(traces.values()) if as_dict else list(traces)
+        rows = attribute_energy_many(trs, phases, corrections=corrections,
+                                     use_fleet=use_fleet, chunk=chunk)
+        if as_dict:
+            return dict(zip(traces.keys(), rows))
+        return rows

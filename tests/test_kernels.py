@@ -62,6 +62,61 @@ def test_power_reconstruct(n, s, wrap):
                                    rtol=0.35)
 
 
+# ---------------------------------------------- power_reconstruct (per-row)
+@pytest.mark.parametrize("n,s", [(8, 512), (16, 1024)])
+def test_power_reconstruct_rows(n, s):
+    """Heterogeneous wrap periods: per-row kernel vs per-row oracle, and
+    vs the scalar-wrap kernel on homogeneous rows."""
+    from repro.kernels.power_reconstruct.kernel import \
+        power_reconstruct_rows_kernel
+    from repro.kernels.power_reconstruct.ref import \
+        reconstruct_power_rows_ref
+    rng = np.random.default_rng(int(n + s))
+    t = np.cumsum(rng.uniform(0.5e-3, 1.5e-3, (n, s)), axis=1)
+    t = t.astype(np.float32)
+    p = rng.uniform(50, 250, (n, s)).astype(np.float32)
+    dt = np.diff(t, axis=1, prepend=t[:, :1] - 1e-3)
+    e = np.cumsum(p * dt, axis=1)
+    wrap = np.where(np.arange(n) % 2 == 0, 50.0, 0.0).astype(np.float32)
+    e = np.where(wrap[:, None] > 0, np.mod(e, 50.0), e).astype(np.float32)
+    out = power_reconstruct_rows_kernel(jnp.array(e), jnp.array(t),
+                                        jnp.array(wrap)[:, None],
+                                        interpret=True)
+    ref = reconstruct_power_rows_ref(jnp.array(e), jnp.array(t),
+                                     jnp.array(wrap)[:, None])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-2)
+    # homogeneous no-wrap rows agree with the legacy scalar-wrap kernel
+    legacy = reconstruct_power(jnp.array(e[1::2]), jnp.array(t[1::2]),
+                               wrap_period=0.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(out)[1::2], np.asarray(legacy),
+                               rtol=1e-4, atol=1e-2)
+
+
+# ------------------------------------------------------------ fleet_attribute
+@pytest.mark.parametrize("n,s,p", [(8, 512, 8), (16, 300, 32)])
+def test_fleet_attribute_fused(n, s, p):
+    """Fused ΔE/Δt+integrate kernel == composition of the stage oracles."""
+    from repro.kernels.fleet_attribute.kernel import fleet_attribute_kernel
+    from repro.kernels.fleet_attribute.ref import fleet_attribute_ref
+    rng = np.random.default_rng(int(n * s + p))
+    t = np.cumsum(rng.uniform(0.5e-3, 1.5e-3, (n, s)),
+                  axis=1).astype(np.float32)
+    pw = rng.uniform(50, 250, (n, s)).astype(np.float32)
+    dt = np.diff(t, axis=1, prepend=t[:, :1] - 1e-3)
+    e = np.cumsum(pw * dt, axis=1).astype(np.float32)
+    wrap = np.zeros((n, 1), np.float32)
+    ph = np.sort(rng.uniform(t.min(), t.max(), (p, 2)).astype(np.float32),
+                 axis=1)
+    out = fleet_attribute_kernel(jnp.array(t), jnp.array(e),
+                                 jnp.array(wrap), jnp.array(ph),
+                                 interpret=True)
+    ref = fleet_attribute_ref(jnp.array(t), jnp.array(e), jnp.array(wrap),
+                              jnp.array(ph))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
 # ------------------------------------------------------------ phase_integrate
 @pytest.mark.parametrize("n,s,p", [(8, 256, 32), (16, 1000, 64)])
 def test_phase_integrate(n, s, p):

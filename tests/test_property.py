@@ -1,6 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dev dep: skip, don't error
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import PiecewisePower, square_wave, unwrap_counter
 from repro.core.power_model import occupancy_power

@@ -1,0 +1,39 @@
+"""Cross-sensor time-alignment & fusion (paper §III + §V-B at scale).
+
+The paper's headline methodology is TIME-ALIGNED attribution: per-sensor
+delays are estimated from square-wave workloads, streams are corrected
+onto a common timeline, and reconstructed power is validated against
+on-chip, off-chip and node-level sensors.  This subsystem does that for
+whole fleets of heterogeneous sensors in batched kernel calls, riding on
+the packed (fleet, samples) layout:
+
+  delay   — fleet-wide delay estimation: each stream is slid against the
+            known phase schedule (or a reference stream) by the
+            ``xcorr_align`` lag-bank kernel (one MXU matmul); validated
+            against the simulator's configured ``SensorSpec.delay_s``.
+  regrid  — batched resampling of delay-corrected streams onto one
+            uniform grid (``grid_resample``: masked vectorized binary
+            search + hold/linear interpolation, whole fleet per call).
+  fusion  — inverse-variance fusion of the co-gridded streams
+            (reconstructed ΔE/Δt, on-chip averaged, off-chip Cray-PM,
+            node-level) into one ``FusedStream`` per device with
+            per-sample disagreement/confidence; ``validate_streams``
+            emits the §V-B bias/RMS/detected-lag report and
+            ``attribute_energy_fused`` integrates fused power per phase.
+
+Float64 numpy mirrors of every stage are the ≤1e-5 parity oracles; the
+independent per-trace numpy loop (``align_fuse_host``) is what
+``benchmarks/bench_align.py`` pins the ≥5× speedup against.  Consumers:
+``fleet.api.attribute_energy_fused``, ``ServeEngine.attribute_phases
+(fuse=True)``, ``hpl.energy`` fused MxP accounting.
+"""
+from repro.align.delay import (DelayEstimate, estimate_delays,  # noqa
+                               estimate_delays_host, peak_to_delay,
+                               schedule_reference, stream_reference)
+from repro.align.regrid import (SeriesRows, make_grid,  # noqa: F401
+                                regrid_rows, regrid_rows_host,
+                                series_rows_from_traces)
+from repro.align.fusion import (FusedStream, align_and_fuse,  # noqa
+                                align_fuse_host, attribute_energy_fused,
+                                fuse_gridded, fuse_gridded_host,
+                                group_traces_by_device, validate_streams)

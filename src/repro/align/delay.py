@@ -1,0 +1,133 @@
+"""Fleet-wide sensor delay estimation by lag-bank cross-correlation.
+
+The paper estimates per-sensor delay from square-wave workloads (§III-A1,
+§V-A) one sensor at a time; here the whole fleet is scored in one
+``xcorr_align`` kernel call against a shared reference — either the known
+phase schedule (a ``PiecewisePower`` ground truth the practitioner
+controls) or a chosen reference stream — and each stream's lag is read
+off the correlation peak with 3-point parabolic sub-sample refinement.
+
+Sign convention: positive delay means the stream LAGS the reference; the
+corrected view of the stream is its value at ``t + delay`` (exactly what
+``regrid_rows(..., delays=...)`` queries).
+
+``estimate_delays_host`` is the float64 numpy mirror of the same
+bank-scored semantics (parity oracle); ``benchmarks/bench_align.py``
+times the independent per-trace ``np.correlate`` loop it replaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.power_model import PiecewisePower
+from repro.fleet.reconstruct import auto_interpret
+from repro.kernels.xcorr_align.ops import make_refbank, xcorr_scores
+from repro.kernels.xcorr_align.ref import xcorr_scores_ref
+
+
+@dataclasses.dataclass
+class DelayEstimate:
+    """Per-stream lag against the reference, in seconds and grid steps."""
+    delay_s: np.ndarray       # (K,) seconds; positive = stream lags ref
+    peak_corr: np.ndarray     # (K,) normalized score at the peak
+    lag_steps: np.ndarray     # (K,) sub-sample peak location
+    step: float               # grid step the lags are quantized to
+
+
+def peak_to_delay(scores, step: float, max_lag: int) -> DelayEstimate:
+    """(K, L) correlation scores -> per-row sub-sample delay.
+
+    3-point parabolic refinement around the argmax; at the bank's edge
+    (peak truncated) the raw argmax is kept.  Shared by the device path
+    and the float64 host mirror so the two differ only in score rounding.
+    """
+    s = np.asarray(scores, np.float64)
+    rows = np.arange(s.shape[0])
+    peak = np.argmax(s, axis=1)
+    interior = (peak >= 1) & (peak <= s.shape[1] - 2)
+    p = np.clip(peak, 1, s.shape[1] - 2)
+    s0, s1, s2 = s[rows, p - 1], s[rows, p], s[rows, p + 1]
+    denom = s0 - 2.0 * s1 + s2
+    flat = np.abs(denom) <= 1e-12          # flat 3-point top: keep argmax
+    delta = np.where(flat, 0.0, 0.5 * (s0 - s2) / np.where(flat, 1.0,
+                                                           denom))
+    delta = np.where(interior, np.clip(delta, -0.5, 0.5), 0.0)
+    lag = peak.astype(np.float64) + delta - max_lag
+    return DelayEstimate(delay_s=lag * step, peak_corr=s[rows, peak],
+                         lag_steps=lag, step=float(step))
+
+
+def schedule_reference(truth: PiecewisePower, grid) -> np.ndarray:
+    """The known phase schedule sampled on the grid (float64 watts)."""
+    return truth.power_at(np.asarray(grid, np.float64))
+
+
+def stream_reference(values_row, mask_row) -> np.ndarray:
+    """A chosen stream as reference: mean-centered over its valid span,
+    zeroed elsewhere (the centered-x algebra makes the residual DC of the
+    reference irrelevant to peak location)."""
+    v = np.asarray(values_row, np.float64)
+    m = np.asarray(mask_row, bool)
+    if m.any():
+        v = np.where(m, v - v[m].mean(), 0.0)
+    return v
+
+
+_BANK_CACHE: dict = {}
+
+
+def _cached_refbank(ref: np.ndarray, max_lag: int, dtype):
+    """Lag banks are pure functions of (ref, max_lag) and a fleet sweep
+    scores every stream against the same reference — memoize by content
+    digest so repeated pipeline calls skip the (L, G) shift/gather."""
+    import zlib
+    key = (zlib.crc32(ref.tobytes()), ref.shape[0], max_lag,
+           np.dtype(dtype).str)
+    bank = _BANK_CACHE.get(key)
+    if bank is None:
+        import jax.numpy as jnp
+        bank = make_refbank(jnp.asarray(ref, dtype), max_lag=max_lag)
+        if len(_BANK_CACHE) > 16:       # bound the cache (banks are MBs)
+            _BANK_CACHE.clear()
+        _BANK_CACHE[key] = bank
+    return bank
+
+
+def estimate_delays(values, mask, ref, *, step: float, max_lag: int,
+                    interpret=None, use_kernel: bool = True) \
+        -> DelayEstimate:
+    """Delay of every co-gridded stream against one reference.
+
+    values/mask: (K, G) from ``regrid_rows``; ref: (G,) reference signal
+    on the same grid; step: the grid step (seconds); max_lag: half-width
+    of the search window in grid steps.
+    """
+    import jax.numpy as jnp
+    interpret = auto_interpret(interpret)
+    v = jnp.asarray(values)
+    bank = _cached_refbank(np.asarray(ref), max_lag, v.dtype)
+    scores = xcorr_scores(v, jnp.asarray(mask, v.dtype), bank,
+                          interpret=interpret, use_kernel=use_kernel)
+    return peak_to_delay(np.asarray(scores), step, max_lag)
+
+
+def make_refbank_host(ref, *, max_lag: int) -> np.ndarray:
+    """Float64 numpy mirror of ``make_refbank``."""
+    ref = np.asarray(ref, np.float64)
+    g = ref.shape[0]
+    ref_c = ref - ref.mean()
+    lags = np.arange(-max_lag, max_lag + 1)
+    src = np.arange(g)[None, :] - lags[:, None]
+    ok = (src >= 0) & (src < g)
+    return np.where(ok, ref_c[np.clip(src, 0, g - 1)], 0.0)
+
+
+def estimate_delays_host(values, mask, ref, *, step: float,
+                         max_lag: int) -> DelayEstimate:
+    """Float64 numpy mirror of ``estimate_delays`` (parity oracle)."""
+    bank = make_refbank_host(ref, max_lag=max_lag)
+    scores = xcorr_scores_ref(np.asarray(values, np.float64),
+                              np.asarray(mask, np.float64), bank, xp=np)
+    return peak_to_delay(scores, step, max_lag)

@@ -1,0 +1,437 @@
+"""Variance-weighted cross-sensor fusion + the §V-B validation report.
+
+``align_and_fuse`` is the subsystem's top-level pipeline: heterogeneous
+SensorTraces observing the same devices -> delay-estimated, regridded,
+inverse-variance-fused ``FusedStream`` per device, with per-sample
+disagreement (how much the sensors argue) and confidence (the fused
+estimate's 1σ).  ``validate_streams`` reproduces the paper's §V-B
+cross-sensor comparison: per-sensor bias, RMS disagreement and the
+detected-lag table.  ``attribute_energy_fused`` integrates the fused
+streams per phase — attribution backed by EVERY sensor scope at once
+instead of a single counter.
+
+All heavy stages are the batched kernels (fleet ΔE/Δt, grid_resample,
+xcorr_align) plus one jitted fusion pass; ``fuse_gridded_host`` and
+``align_fuse_host`` are the float64 mirrors (padded-semantics parity
+oracle at ≤1e-5, and the independent per-trace numpy loop the benchmark
+times against).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+import jax
+
+from repro.align.delay import (estimate_delays, peak_to_delay,
+                               schedule_reference, stream_reference)
+from repro.align.regrid import (SeriesRows, make_grid, regrid_rows,
+                                series_rows_from_traces)
+from repro.core.power_model import PiecewisePower
+from repro.core.reconstruction import PowerSeries
+from repro.fleet.reconstruct import auto_interpret
+
+DEFAULT_MAX_LAG = 512          # grid steps; ~256 ms at a 0.5 ms grid
+VAR_FLOOR_W2 = 0.25            # (0.5 W)^2: no stream gets infinite weight
+
+
+@jax.jit
+def fuse_gridded(values, mask, var_floor=VAR_FLOOR_W2):
+    """Inverse-variance fusion of co-gridded streams, batched per device.
+
+    values/mask: (D, K, G) — D devices, K sensor streams each (masked
+    rows pad ragged groups).  Per-stream noise variance is blind-
+    estimated as the mean squared residual against the unweighted
+    cross-sensor mean, so noisy/heavily-filtered streams down-weight
+    themselves; ``var_floor`` keeps near-identical streams finite.
+
+    Returns (fused, disagreement, confidence, weights, out_mask):
+      fused        (D, G) inverse-variance weighted power
+      disagreement (D, G) weighted cross-sensor std at each sample
+      confidence   (D, G) 1σ of the fused estimate (1/sqrt(Σw))
+      weights      (D, K) per-stream weights (normalized per device)
+      out_mask     (D, G) any stream valid
+    """
+    import jax.numpy as jnp
+    m = mask.astype(values.dtype)
+    cnt = jnp.sum(m, axis=1)                                   # (D, G)
+    m0 = jnp.sum(values * m, axis=1) / jnp.maximum(cnt, 1.0)
+    resid = (values - m0[:, None, :]) * m
+    n_k = jnp.sum(m, axis=2)                                   # (D, K)
+    var_k = jnp.sum(resid * resid, axis=2) / jnp.maximum(n_k, 1.0)
+    w_k = jnp.where(n_k > 1, 1.0 / (var_k + var_floor), 0.0)   # (D, K)
+    wm = w_k[:, :, None] * m                                   # (D, K, G)
+    w_tot = jnp.sum(wm, axis=1)                                # (D, G)
+    safe = jnp.maximum(w_tot, 1e-30)
+    fused = jnp.sum(wm * values, axis=1) / safe
+    dev = values - fused[:, None, :]
+    disagree = jnp.sqrt(jnp.sum(wm * dev * dev, axis=1) / safe)
+    conf = 1.0 / jnp.sqrt(safe)
+    # a grid point counts only where some stream carries weight —
+    # coverage by weightless (n_k <= 1) streams would otherwise emit
+    # fused 0 W / astronomical confidence as "valid"
+    out_mask = w_tot > 0
+    z = jnp.zeros_like(fused)
+    w_norm = w_k / jnp.maximum(jnp.sum(w_k, axis=1, keepdims=True), 1e-30)
+    return (jnp.where(out_mask, fused, z),
+            jnp.where(out_mask, disagree, z),
+            jnp.where(out_mask, conf, z), w_norm, out_mask)
+
+
+def fuse_gridded_host(values, mask, var_floor=VAR_FLOOR_W2):
+    """Float64 numpy mirror of ``fuse_gridded`` (parity oracle)."""
+    v = np.asarray(values, np.float64)
+    m = np.asarray(mask, np.float64)
+    cnt = m.sum(axis=1)
+    m0 = (v * m).sum(axis=1) / np.maximum(cnt, 1.0)
+    resid = (v - m0[:, None, :]) * m
+    n_k = m.sum(axis=2)
+    var_k = (resid * resid).sum(axis=2) / np.maximum(n_k, 1.0)
+    w_k = np.where(n_k > 1, 1.0 / (var_k + var_floor), 0.0)
+    wm = w_k[:, :, None] * m
+    w_tot = wm.sum(axis=1)
+    safe = np.maximum(w_tot, 1e-30)
+    fused = (wm * v).sum(axis=1) / safe
+    dev = v - fused[:, None, :]
+    disagree = np.sqrt((wm * dev * dev).sum(axis=1) / safe)
+    conf = 1.0 / np.sqrt(safe)
+    out_mask = w_tot > 0
+    w_norm = w_k / np.maximum(w_k.sum(axis=1, keepdims=True), 1e-30)
+    z = np.zeros_like(fused)
+    return (np.where(out_mask, fused, z), np.where(out_mask, disagree, z),
+            np.where(out_mask, conf, z), w_norm, out_mask)
+
+
+@dataclasses.dataclass
+class FusedStream:
+    """One device's fused power timeline + per-sensor diagnostics."""
+    grid: np.ndarray            # (G,) absolute seconds (float64)
+    watts: np.ndarray           # (G,) fused power
+    mask: np.ndarray            # (G,) any-sensor coverage
+    disagreement_w: np.ndarray  # (G,) weighted cross-sensor std
+    confidence_w: np.ndarray    # (G,) 1σ of the fused estimate
+    weights: np.ndarray         # (K,) normalized per-stream weights
+    delays: np.ndarray          # (K,) detected lag vs the reference (s)
+    peak_corr: np.ndarray       # (K,) correlation at the detected lag
+    names: list                 # (K,) stream names
+    stream_values: np.ndarray   # (K, G) aligned per-stream power
+    stream_mask: np.ndarray     # (K, G)
+
+    @property
+    def series(self) -> PowerSeries:
+        """Hold-integrable view (``watts[i]`` on ``(grid[i-1], grid[i]]``)."""
+        return PowerSeries(self.grid, self.watts.astype(np.float64),
+                           source="fused")
+
+
+def default_grid(rows: SeriesRows, *, grid_step=None,
+                 max_points: int = 65536):
+    """Shared grid spanning every row, at half the fastest cadence."""
+    steps = rows.median_step()
+    pos = steps[steps > 0]
+    if grid_step is None:
+        grid_step = 0.5 * float(pos.min()) if len(pos) else 1e-3
+    t_lo = min(float(rows.times[i, rows.first[i]]) for i in
+               range(rows.n_streams) if rows.first[i] < rows.n[i])
+    t_hi = max(float(rows.times[i, rows.n[i] - 1])
+               for i in range(rows.n_streams))
+    span = max(t_hi - t_lo, grid_step)
+    grid_step = max(grid_step, span / max_points)
+    return make_grid(rows.t0 + t_lo, rows.t0 + t_hi, grid_step), grid_step
+
+
+def align_and_fuse(groups, *, reference=None, grid=None, grid_step=None,
+                   max_lag=None, corrections=None, mode: str = "hold",
+                   use_t_measured: bool = True, align: bool = True,
+                   delays=None, var_floor=VAR_FLOOR_W2, interpret=None,
+                   use_kernel=None, dtype=np.float32):
+    """groups: [[SensorTrace, ...], ...] — one list per device.
+
+    reference: a ``PiecewisePower`` known schedule, an explicit (G,)
+    signal on the grid, or None (each group's FIRST stream is its own
+    reference — on-chip energy counters first is the useful order).
+    ``delays`` overrides estimation (seconds per stream, flat order).
+    ``use_kernel=None`` lets each stage auto-dispatch (Pallas kernels
+    compiled, equivalent jnp paths where those are faster on CPU).
+    Returns one ``FusedStream`` per group.
+    """
+    groups = [list(g) for g in groups]
+    flat = [tr for g in groups for tr in g]
+    interpret = auto_interpret(interpret)
+    uk = True if use_kernel is None else use_kernel
+    rows = series_rows_from_traces(flat, corrections=corrections,
+                                   use_t_measured=use_t_measured,
+                                   interpret=interpret,
+                                   use_kernel=uk, dtype=dtype)
+    if grid is None:
+        grid, grid_step = default_grid(rows, grid_step=grid_step)
+    else:
+        grid = np.asarray(grid, np.float64)
+        grid_step = float(np.median(np.diff(grid)))
+    if max_lag is None:
+        max_lag = min(DEFAULT_MAX_LAG, max(len(grid) // 4, 1))
+
+    vals0, mask0 = regrid_rows(rows, grid, mode=mode,
+                               interpret=interpret, use_kernel=use_kernel)
+    k_tot = rows.n_streams
+    d_s = np.zeros((k_tot,))
+    peak = np.ones((k_tot,))
+    if delays is not None:
+        d_s = np.asarray(delays, np.float64).reshape(-1)
+    elif align:
+        if isinstance(reference, PiecewisePower):
+            ref = schedule_reference(reference, grid)
+            est = estimate_delays(vals0, mask0, ref, step=grid_step,
+                                  max_lag=max_lag, interpret=interpret,
+                                  use_kernel=uk)
+            d_s, peak = est.delay_s, est.peak_corr
+        elif reference is not None:
+            est = estimate_delays(vals0, mask0, np.asarray(reference),
+                                  step=grid_step, max_lag=max_lag,
+                                  interpret=interpret, use_kernel=uk)
+            d_s, peak = est.delay_s, est.peak_corr
+        else:
+            v0 = np.asarray(vals0)
+            m0 = np.asarray(mask0)
+            lo = 0
+            for g in groups:
+                hi = lo + len(g)
+                ref = stream_reference(v0[lo], m0[lo])
+                est = estimate_delays(vals0[lo:hi], mask0[lo:hi], ref,
+                                      step=grid_step, max_lag=max_lag,
+                                      interpret=interpret, use_kernel=uk)
+                # express every lag relative to the group's reference
+                # stream; the reference's own self-lag (~0) is kept so
+                # residual sub-sample bias cancels within the group
+                d_s[lo:hi] = est.delay_s
+                peak[lo:hi] = est.peak_corr
+                lo = hi
+    if np.any(d_s != 0.0):
+        vals, mask = regrid_rows(rows, grid, delays=d_s, mode=mode,
+                                 interpret=interpret,
+                                 use_kernel=use_kernel)
+    else:
+        vals, mask = vals0, mask0
+
+    # ragged groups -> (D, Kmax, G) with masked padding rows
+    import jax.numpy as jnp
+    d_n = len(groups)
+    k_max = max(len(g) for g in groups)
+    g_n = len(grid)
+    v_np = np.asarray(vals)
+    m_np = np.asarray(mask)
+    if all(len(g) == k_max for g in groups):     # uniform: pure reshape
+        sv = v_np.reshape(d_n, k_max, g_n)
+        sm = m_np.reshape(d_n, k_max, g_n)
+    else:
+        sv = np.zeros((d_n, k_max, g_n), dtype)
+        sm = np.zeros((d_n, k_max, g_n), bool)
+        lo = 0
+        for di, g in enumerate(groups):
+            hi = lo + len(g)
+            sv[di, :len(g)] = v_np[lo:hi]
+            sm[di, :len(g)] = m_np[lo:hi]
+            lo = hi
+    fused, dis, conf, w, out_m = fuse_gridded(
+        jnp.asarray(sv), jnp.asarray(sm), var_floor)
+    fused, dis, conf, w, out_m = (np.asarray(a) for a in
+                                  (fused, dis, conf, w, out_m))
+
+    out = []
+    lo = 0
+    for di, g in enumerate(groups):
+        hi = lo + len(g)
+        out.append(FusedStream(
+            grid=grid, watts=fused[di].astype(np.float64),
+            mask=out_m[di],
+            disagreement_w=dis[di], confidence_w=conf[di],
+            weights=w[di, :len(g)], delays=d_s[lo:hi],
+            peak_corr=peak[lo:hi],
+            names=[tr.name for tr in g],
+            stream_values=v_np[lo:hi], stream_mask=m_np[lo:hi]))
+        lo = hi
+    return out
+
+
+def validate_streams(groups, **kw) -> dict:
+    """The paper's §V-B cross-sensor comparison, per device group.
+
+    Returns {"devices": [{name, streams: {sensor: {bias_w, rms_w,
+    delay_s, peak_corr, weight}}, mean_disagreement_w}]} — the bias /
+    RMS-disagreement / detected-lag table, computed on the delay-
+    corrected common timeline.
+    """
+    fused_list = align_and_fuse(groups, **kw)
+    devices = []
+    for di, fs in enumerate(fused_list):
+        streams = {}
+        for k, name in enumerate(fs.names):
+            m = fs.stream_mask[k] & fs.mask
+            dev = fs.stream_values[k][m] - fs.watts[m]
+            streams[name] = {
+                "bias_w": float(dev.mean()) if m.any() else float("nan"),
+                "rms_w": float(np.sqrt((dev ** 2).mean()))
+                if m.any() else float("nan"),
+                "delay_s": float(fs.delays[k]),
+                "peak_corr": float(fs.peak_corr[k]),
+                "weight": float(fs.weights[k]),
+            }
+        devices.append({
+            "name": f"device{di}", "streams": streams,
+            "mean_disagreement_w":
+                float(fs.disagreement_w[fs.mask].mean())
+                if fs.mask.any() else float("nan"),
+        })
+    return {"devices": devices}
+
+
+def attribute_energy_fused(groups, phases, *, chunk: int = 4096,
+                           **kw) -> list:
+    """Per-phase energy on the FUSED stream of each device group.
+
+    phases: [(name, t_start, t_end)] absolute seconds.  Returns one
+    ``[PhaseEnergy]`` row per group — the fused counterpart of
+    ``attribute_energy_fleet`` (every sensor scope backs each number,
+    not one counter).  Integration streams through the
+    ``phase_integrate`` kernel in ``chunk``-column windows.
+    """
+    from repro.core.attribution import PhaseEnergy
+    from repro.fleet.streaming import StreamingPhaseAccumulator
+    fused_list = align_and_fuse(groups, **kw)
+    if not phases:
+        return [[] for _ in fused_list]
+    grid = fused_list[0].grid
+    t0 = float(grid[0])
+    d_n = len(fused_list)
+    # pad the device axis to the kernels' compiled row tiling (all-
+    # padding rows are fully masked -> exactly zero energy)
+    d_pad = d_n if d_n <= 8 else -(-d_n // 8) * 8
+    times = np.broadcast_to((grid - t0).astype(np.float32),
+                            (d_pad, len(grid)))
+    watts = np.zeros((d_pad, len(grid)), np.float32)
+    valid = np.zeros((d_pad, len(grid)), bool)
+    watts[:d_n] = np.stack([fs.watts for fs in fused_list])
+    valid[:d_n] = np.stack([fs.mask for fs in fused_list])
+    windows = [(a - t0, b - t0) for _, a, b in phases]
+    uk = kw.get("use_kernel")
+    acc = StreamingPhaseAccumulator(windows, d_pad,
+                                    interpret=kw.get("interpret"),
+                                    use_kernel=True if uk is None else uk)
+    for lo in range(0, len(grid), chunk):
+        hi = min(lo + chunk, len(grid))
+        acc.update(times[:, lo:hi], watts[:, lo:hi],
+                   valid=valid[:, lo:hi])
+    totals = acc.totals()
+    out = []
+    for di in range(d_n):
+        row = []
+        for (name, a, b), e in zip(phases, totals[di]):
+            dur = max(b - a, 1e-12)
+            row.append(PhaseEnergy(name, a, b, float(e), float(e / dur)))
+        out.append(row)
+    return out
+
+
+_DEVICE_RE = re.compile(r"^(?:chip|pm_accel)(\d+)_")
+
+
+def group_traces_by_device(traces: dict, *, include_node: bool = False):
+    """{name: SensorTrace} -> ordered {device: [SensorTrace]} groups.
+
+    Chip-scope streams (``chip{i}_*``, ``pm_accel{i}_*``) group by device
+    index with cumulative counters first (they make the best in-group
+    alignment reference: fastest response, no filtering).  Node-scope
+    sensors form a ``"node"`` group only when ``include_node`` (fusing
+    node power into a chip stream would double-count).
+    """
+    groups: dict = {}
+    for name, tr in traces.items():
+        m = _DEVICE_RE.match(name)
+        if m:
+            groups.setdefault(f"device{int(m.group(1))}", []).append(tr)
+        elif include_node:
+            groups.setdefault("node", []).append(tr)
+    for key, trs in groups.items():
+        trs.sort(key=lambda tr: (not tr.spec.is_cumulative, tr.name))
+    return dict(sorted(groups.items()))
+
+
+# ---------------------------------------------------------------------------
+# Independent per-trace float64 host loop (benchmark baseline + cross-check)
+# ---------------------------------------------------------------------------
+
+def _xcorr_np(xc, refc, max_lag):
+    """Per-trace normalized xcorr scores, one np.dot per candidate lag.
+
+    (Deliberately NOT ``np.correlate(..., "full")`` — that evaluates all
+    2G-1 lags and would strawman the host baseline; per-lag dots are
+    what a careful numpy implementation does for a bounded lag window.)
+    """
+    g = len(refc)
+    lags = np.arange(-max_lag, max_lag + 1)
+    num = np.empty(len(lags))
+    den_r = np.empty(len(lags))
+    for i, l in enumerate(lags):
+        a, b = (xc[l:], refc[:g - l]) if l >= 0 else (xc[:g + l],
+                                                      refc[-l:])
+        num[i] = a @ b
+        den_r[i] = b @ b
+    den_x = np.sqrt((xc * xc).sum())
+    return num / (den_x * np.sqrt(den_r) + 1e-12)
+
+
+def align_fuse_host(groups, grid, *, reference=None, max_lag: int = 256,
+                    corrections=None, var_floor=VAR_FLOOR_W2):
+    """Per-trace float64 numpy pipeline: the loop the kernels replace.
+
+    Reconstruct / resample / np.correlate / shift / fuse one trace at a
+    time — the benchmark's timing baseline and the independent (looser,
+    compaction-based rather than padded) semantic cross-check.  Returns
+    (fused (D, G), delays (D, Kmax), masks (D, G)).
+    """
+    from repro.core.calibration import apply_corrections
+    from repro.core.reconstruction import (delta_e_over_delta_t,
+                                           power_trace_series)
+    grid = np.asarray(grid, np.float64)
+    step = float(np.median(np.diff(grid)))
+    g_n = len(grid)
+    d_n = len(groups)
+    k_max = max(len(g) for g in groups)
+    fused = np.zeros((d_n, g_n))
+    delays = np.zeros((d_n, k_max))
+    masks = np.zeros((d_n, g_n), bool)
+    for di, group in enumerate(groups):
+        series = []
+        for tr in group:
+            tr = apply_corrections(tr, corrections)
+            series.append(delta_e_over_delta_t(tr)
+                          if tr.spec.is_cumulative
+                          else power_trace_series(tr))
+        if isinstance(reference, PiecewisePower):
+            ref = reference.power_at(grid)
+        elif reference is not None:
+            ref = np.asarray(reference, np.float64)
+        else:
+            s0 = series[0]
+            ref = s0.resample(grid).watts
+            rm = (grid >= s0.t[0]) & (grid <= s0.t[-1])
+            ref = np.where(rm, ref - ref[rm].mean(), 0.0)
+        refc = ref - ref.mean()
+        vals = np.zeros((len(group), g_n))
+        m = np.zeros((len(group), g_n), bool)
+        for k, s in enumerate(series):
+            x = s.resample(grid).watts
+            xm = (grid >= s.t[0]) & (grid <= s.t[-1])
+            xc = np.where(xm, x - x[xm].mean(), 0.0)
+            scores = _xcorr_np(xc, refc, max_lag)
+            est = peak_to_delay(scores[None, :], step, max_lag)
+            delays[di, k] = est.delay_s[0]
+            sh = grid + est.delay_s[0]
+            vals[k] = s.resample(sh).watts
+            m[k] = (sh >= s.t[0]) & (sh <= s.t[-1])
+        f, _, _, _, om = fuse_gridded_host(vals[None], m[None], var_floor)
+        fused[di] = f[0]
+        masks[di] = om[0]
+    return fused, delays, masks

@@ -1,0 +1,210 @@
+"""Heterogeneous sensor streams -> padded sample rows -> one shared grid.
+
+The alignment subsystem compares streams with different cadences, scopes
+and filters; that needs every stream expressed on a single uniform
+timeline.  Two stages, both batched:
+
+  ``series_rows_from_traces`` — SensorTraces (mixed cumulative + power)
+      to padded per-stream (times, values) rows: cumulative counters run
+      through the fleet ΔE/Δt pipeline (one fused Pallas call), power
+      sensors pack directly; everything is rebased to one float64 origin
+      before the dtype cast (same precision argument as fleet.packing).
+  ``regrid_rows`` — all rows onto a shared uniform grid through the
+      ``grid_resample`` kernel, with optional per-row delay shifts
+      (the query for row i is ``grid + delay[i]``: the corrected view of
+      a stream that lags the reference by ``delay[i]``).
+
+``regrid_rows_host`` is the float64 numpy mirror of the same padded
+semantics (the ≤1e-5 parity oracle); per-trace ``PowerSeries.resample``
+loops remain the independent cross-check at looser tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.calibration import apply_corrections
+from repro.fleet.packing import ROW_ALIGN, pack_traces
+from repro.fleet.reconstruct import auto_interpret, fleet_reconstruct
+from repro.kernels.grid_resample.ops import grid_resample
+from repro.kernels.grid_resample.ref import grid_resample_ref
+
+
+def make_grid(t_lo: float, t_hi: float, step: float) -> np.ndarray:
+    """Uniform float64 grid covering [t_lo, t_hi] at ``step`` seconds."""
+    n = max(int(np.floor((t_hi - t_lo) / step)) + 1, 2)
+    return t_lo + step * np.arange(n)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class SeriesRows:
+    """Padded per-stream sample rows on one shared time origin.
+
+    times/values: (K, S) with K a multiple of ROW_ALIGN; row tails
+    replicate the last sample (zero-width, search-invisible).
+    ``first[i]`` is the index of the first *defined* sample — 0 for raw
+    power readings, the first interval-closing slot for ΔE/Δt rows (the
+    reconstruction's column 0 carries no power).  ``n[i]`` bounds the
+    search like fleet packing's ``n_samples``.
+    """
+    times: np.ndarray         # (K, S), seconds since t0
+    values: np.ndarray        # (K, S), watts
+    n: np.ndarray             # (K,) int32
+    first: np.ndarray         # (K,) int32
+    names: list
+    n_streams: int
+    t0: float                 # shared absolute origin (float64)
+
+    @property
+    def shape(self):
+        return self.times.shape
+
+    def device_arrays(self):
+        """(times, values, n, first) as cached jnp arrays — the regrid
+        passes run twice per pipeline (estimate, then delay-corrected);
+        uploading the padded block once halves the ingest traffic."""
+        if getattr(self, "_dev", None) is None:
+            import jax.numpy as jnp
+            self._dev = (jnp.asarray(self.times), jnp.asarray(self.values),
+                         jnp.asarray(self.n), jnp.asarray(self.first))
+        return self._dev
+
+    def median_step(self) -> np.ndarray:
+        """(n_streams,) median positive sample spacing per row (blind
+        cadence estimate — used for default grid steps / tolerances)."""
+        out = np.zeros((self.n_streams,))
+        for i in range(self.n_streams):
+            t = self.times[i, self.first[i]:self.n[i]].astype(np.float64)
+            dt = np.diff(t)
+            dt = dt[dt > 0]
+            out[i] = float(np.median(dt)) if len(dt) else 0.0
+        return out
+
+
+def series_rows_from_traces(traces, *, corrections=None,
+                            use_t_measured: bool = True, t0=None,
+                            interpret=None, use_kernel: bool = True,
+                            dtype=np.float32) -> SeriesRows:
+    """SensorTraces -> SeriesRows (order preserved).
+
+    Cumulative counters are reconstructed to instantaneous power through
+    the batched fleet pipeline; power sensors pack their raw readings
+    (duplicate publications republish identical (t, v) pairs and the
+    lower-bound search skips them for free; timestamps are made
+    non-decreasing with a running max so the search precondition holds).
+    """
+    traces = [apply_corrections(tr, corrections) for tr in traces]
+    assert traces, "series_rows_from_traces needs at least one trace"
+    interpret = auto_interpret(interpret)
+    if t0 is None:
+        t0 = min(float((tr.t_measured if use_t_measured
+                        else tr.t_read)[0]) for tr in traces)
+    cum = [i for i, tr in enumerate(traces) if tr.spec.is_cumulative]
+    pwr = [i for i, tr in enumerate(traces) if not tr.spec.is_cumulative]
+
+    k = _round_up(len(traces), ROW_ALIGN)
+    s_cum = s_pwr = 2
+    recon = None
+    packed = None
+    if cum:
+        packed = pack_traces([traces[i] for i in cum],
+                             use_t_measured=use_t_measured, dtype=dtype)
+        recon = fleet_reconstruct(packed, interpret=interpret,
+                                  use_kernel=use_kernel)
+        s_cum = packed.shape[1]
+    if pwr:
+        s_pwr = max(max(len(traces[i]) for i in pwr), 2)
+    s = max(s_cum, s_pwr)
+
+    times = np.zeros((k, s), dtype)
+    values = np.zeros((k, s), dtype)
+    n = np.full((k,), 2, np.int32)
+    first = np.zeros((k,), np.int32)
+    names = [tr.name for tr in traces]
+
+    if cum:
+        power, r_times, valid = (np.asarray(a) for a in recon)
+        rows_sel = np.asarray(cum)
+        n_cum = len(cum)
+        # rebase the pack's origin onto the shared one (float64 diff is
+        # tiny — at most the fleet's ingest spread).  Slots at/after
+        # ``n`` are never consulted (the search clamps to [first, n)),
+        # so the packed tails can be copied as-is in one vectorized move
+        shift = dtype(packed.t0 - t0)
+        times[rows_sel, :s_cum] = r_times[:n_cum] + shift
+        values[rows_sel, :s_cum] = power[:n_cum]
+        n[rows_sel] = packed.n_samples[:n_cum]
+        v = valid[:n_cum]
+        first[rows_sel] = np.where(v.any(axis=1), np.argmax(v, axis=1),
+                                   packed.n_samples[:n_cum])
+    for i in pwr:
+        tr = traces[i]
+        t = (tr.t_measured if use_t_measured else tr.t_read)
+        kk = len(tr)
+        # running max: tool jitter may reorder reads; a non-decreasing
+        # timeline is the binary search's precondition (ties are
+        # zero-width and the lower bound lands on the first of each run)
+        times[i, :kk] = np.maximum.accumulate(t - t0)
+        values[i, :kk] = tr.value
+        times[i, kk:] = times[i, kk - 1]
+        values[i, kk:] = values[i, kk - 1]
+        n[i] = kk
+        first[i] = 0
+    for i in range(len(traces), k):          # all-padding rows
+        n[i] = 2
+        first[i] = 2                         # empty domain -> masked out
+    return SeriesRows(times, values, n, first, names, len(traces), t0)
+
+
+def regrid_rows(rows: SeriesRows, grid, *, delays=None, mode: str = "hold",
+                interpret=None, use_kernel=None):
+    """Resample all rows onto ``grid`` (absolute seconds) -> (vals, mask).
+
+    delays: (n_streams,) per-row lag in seconds (positive = the stream
+    lags the reference); the kernel queries ``grid + delay`` per row.
+    ``use_kernel=None`` auto-dispatches (Pallas kernel compiled,
+    bit-identical sort-based jnp search on CPU — see
+    ``kernels.grid_resample.ops``).  Returns jnp (n_streams, G) arrays.
+    """
+    import jax.numpy as jnp
+    interpret = auto_interpret(interpret)
+    k = rows.shape[0]
+    d = np.zeros((k,), rows.times.dtype)
+    if delays is not None:
+        d[:rows.n_streams] = np.asarray(delays, np.float64)
+    g_rel = np.asarray(grid, np.float64) - rows.t0
+    times_j, values_j, n_j, first_j = rows.device_arrays()
+    vals, mask = grid_resample(times_j, values_j, n_j, first_j,
+                               jnp.asarray(g_rel.astype(rows.times.dtype)),
+                               jnp.asarray(d), mode=mode,
+                               interpret=interpret, use_kernel=use_kernel)
+    return vals[:rows.n_streams], mask[:rows.n_streams]
+
+
+def regrid_rows_host(rows: SeriesRows, grid, *, delays=None,
+                     mode: str = "hold"):
+    """Float64 numpy mirror of ``regrid_rows`` — the ≤1e-5 parity oracle.
+
+    The query points (grid, delays — and their sum, which numpy then
+    forms in the same low precision) stay in the rows' dtype so the
+    float64 search compares the EXACT values the device path compares:
+    a hold lookup is discontinuous at sample times, and a query landing
+    within one float32 ulp of a sample would otherwise make the two
+    paths read different samples, rendering the comparison meaningless.
+    """
+    k = rows.shape[0]
+    d = np.zeros((k,), rows.times.dtype)
+    if delays is not None:
+        d[:rows.n_streams] = np.asarray(delays, np.float64)
+    g_rel = (np.asarray(grid, np.float64)
+             - rows.t0).astype(rows.times.dtype)
+    out, mask = grid_resample_ref(
+        rows.times.astype(np.float64), rows.values.astype(np.float64),
+        rows.n.reshape(-1, 1), rows.first.reshape(-1, 1),
+        g_rel.reshape(-1, 1), d.reshape(-1, 1), mode=mode, xp=np)
+    return out[:rows.n_streams], mask[:rows.n_streams]

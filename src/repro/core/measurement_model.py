@@ -41,6 +41,12 @@ class SensorSpec:
     timestamp_jitter_s: float = 2e-5
     filter_kind: str = "none"     # "none" | "ma" (moving avg) | "iir"
     filter_window_s: float = 0.0  # MA window or IIR time-constant
+    # fixed sensing latency: the value published at t_measured reflects
+    # the physical state delay_s EARLIER (firmware aggregation windows,
+    # ADC conversion, telemetry transport).  Invisible in the trace
+    # itself — the alignment subsystem (repro.align) blind-estimates it
+    # from square-wave cross-correlation and tests recover this value.
+    delay_s: float = 0.0
     quantum: float = 1.0          # value quantization (uJ for energy, W)
     wrap_bits: int = 0            # cumulative counters wrap at 2**bits
     # stage 2: driver publication

@@ -49,13 +49,20 @@ def _jittered_grid(t0, t1, interval, jitter, rng):
 
 
 def produce(spec: SensorSpec, truth: PiecewisePower, rng) -> tuple:
-    """Stage 1: (t_measured, value) at the sensor's own cadence."""
+    """Stage 1: (t_measured, value) at the sensor's own cadence.
+
+    ``spec.delay_s`` models fixed sensing latency: the sample published
+    with timestamp ``tm`` reflects the physical state at ``tm - delay_s``
+    (clamped at the start of the run).  ``delay_s=0`` is bit-identical to
+    the undelayed pipeline.
+    """
     t0, t1 = truth.t0, truth.t1
     tm = _jittered_grid(t0, t1, spec.production_interval_s,
                         spec.production_jitter_s, rng)
+    te = np.maximum(tm - spec.delay_s, t0) if spec.delay_s else tm
     if spec.kind == "energy_cum":
-        e = truth.energy_between(t0, tm) * spec.scale \
-            + spec.offset_w * (tm - t0)
+        e = truth.energy_between(t0, te) * spec.scale \
+            + spec.offset_w * (te - t0)
         ticks = np.floor(e / spec.quantum)
         if spec.wrap_bits:
             ticks = np.mod(ticks, 2.0 ** spec.wrap_bits)
@@ -63,22 +70,22 @@ def produce(spec: SensorSpec, truth: PiecewisePower, rng) -> tuple:
     else:
         if spec.filter_kind == "ma" and spec.filter_window_s > 0:
             w = spec.filter_window_s
-            val = truth.energy_between(np.maximum(tm - w, t0), tm) \
-                / np.maximum(tm - np.maximum(tm - w, t0), 1e-9)
+            val = truth.energy_between(np.maximum(te - w, t0), te) \
+                / np.maximum(te - np.maximum(te - w, t0), 1e-9)
         elif spec.filter_kind == "iir" and spec.filter_window_s > 0:
             tau = spec.filter_window_s
             seg = truth.average_power(
-                np.concatenate([[t0], tm[:-1]]), tm)
+                np.concatenate([[t0], te[:-1]]), te)
             val = np.empty_like(seg)
             y = truth.power_at(t0)
             prev_t = t0
-            for i, (t, p) in enumerate(zip(tm, seg)):
-                a = np.exp(-(t - prev_t) / tau)
+            for i, (t, p) in enumerate(zip(te, seg)):
+                a = np.exp(-max(t - prev_t, 0.0) / tau)
                 y = a * y + (1 - a) * p
                 val[i] = y
                 prev_t = t
         else:
-            val = truth.power_at(tm)
+            val = truth.power_at(te)
         val = val * spec.scale + spec.offset_w
         if spec.noise_w:
             val = val + rng.normal(0.0, spec.noise_w, len(val))

@@ -158,6 +158,51 @@ class ShardingPlan:
         return jax.tree.map_with_path(shard_one, cache_structs)
 
 
+# ---------------------------------------------------------------------------
+# Fleet-axis sharding: the packed (fleet, samples) layout's natural split.
+# ---------------------------------------------------------------------------
+
+def fleet_mesh(min_devices: int = 2) -> Optional[Mesh]:
+    """1-D mesh over every local device for fleet-row sharding.
+
+    Returns None on a single-device host — the fleet pipeline then runs
+    exactly the unsharded path (parity oracle unchanged).
+    """
+    import numpy as np
+    devices = jax.devices()
+    if len(devices) < min_devices:
+        return None
+    return Mesh(np.asarray(devices), ("fleet",))
+
+
+def fleet_rows_divisible(mesh: Optional[Mesh], n_rows: int) -> bool:
+    """True when the padded fleet axis splits evenly over the mesh."""
+    return mesh is not None and n_rows % mesh.shape["fleet"] == 0
+
+
+def fleet_spec(ndim: int) -> P:
+    """Row-sharded spec for a (fleet, ...) array: P("fleet", None, ...)."""
+    return P("fleet", *([None] * (ndim - 1)))
+
+
+def fleet_shard_map(fn, mesh: Mesh, n_in: int, n_out: int,
+                    replicated_in: tuple = ()):
+    """Wrap a row-independent fleet function for per-device execution.
+
+    Every input/output is row-sharded on the fleet axis except the
+    positions in ``replicated_in`` (e.g. a shared phase table).  The
+    fleet kernels are embarrassingly parallel across rows, so this is a
+    pure partition: no collectives, each device runs its row block.
+    """
+    in_specs = tuple(P() if i in replicated_in else fleet_spec(2)
+                     for i in range(n_in))
+    out_specs = tuple(fleet_spec(2) for _ in range(n_out))
+    if n_out == 1:
+        out_specs = out_specs[0]
+    return shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)
+
+
 def make_plan(mesh: Mesh, arch_params: int) -> ShardingPlan:
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     fsdp = arch_params > FSDP_THRESHOLD and "data" in mesh.axis_names

@@ -25,4 +25,4 @@ from repro.fleet.reconstruct import (fleet_reconstruct,  # noqa: F401
 from repro.fleet.streaming import (FleetStream,  # noqa: F401
                                    StreamingPhaseAccumulator)
 from repro.fleet.api import (attribute_energy_fleet,  # noqa: F401
-                             fleet_power_series)
+                             attribute_energy_fused, fleet_power_series)

@@ -69,3 +69,18 @@ def attribute_energy_fleet(traces, phases, *, corrections=None,
             row.append(PhaseEnergy(name, a, b, float(e), float(e / dur)))
         out.append(row)
     return out
+
+
+def attribute_energy_fused(trace_groups, phases, **kw):
+    """Per-phase energy on the FUSED cross-sensor stream of each device.
+
+    trace_groups: [[SensorTrace, ...], ...] — all sensors observing one
+    device per group (mixed cumulative + power).  The alignment
+    subsystem estimates per-sensor delays, regrids onto one timeline and
+    inverse-variance-fuses before integrating, so each number is backed
+    by every sensor scope instead of a single counter; see
+    ``repro.align`` for the keyword surface (reference, corrections,
+    grid_step, ...).  Returns one ``[PhaseEnergy]`` per group.
+    """
+    from repro.align import attribute_energy_fused as _fused
+    return _fused(trace_groups, phases, **kw)

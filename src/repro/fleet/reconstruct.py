@@ -93,8 +93,33 @@ def _fleet_slow(energy, times, valid, wrap_period, *,
     return jnp.where(valid_out, power, 0.0), t, valid_out
 
 
+_SHARDED_FAST_CACHE: dict = {}
+
+
+def _fleet_fast_sharded(mesh, interpret: bool, use_kernel: bool):
+    """shard_map-wrapped fast path: each device reconstructs its rows.
+
+    Rows are independent, so the fleet axis partitions with zero
+    collectives; the per-device block runs the SAME kernel as the
+    unsharded path (parity is exact by construction).
+    """
+    from repro.distributed.sharding import fleet_shard_map
+    key = (mesh, interpret, use_kernel)
+    fn = _SHARDED_FAST_CACHE.get(key)
+    if fn is None:
+        def block(energy, times, wrap_row, n_row):
+            if use_kernel:
+                return power_reconstruct_fleet_kernel(
+                    energy, times, wrap_row, n_row, interpret=interpret)
+            return reconstruct_power_fleet_ref(energy, times, wrap_row,
+                                               n_row)
+        fn = jax.jit(fleet_shard_map(block, mesh, n_in=4, n_out=3))
+        _SHARDED_FAST_CACHE[key] = fn
+    return fn
+
+
 def fleet_reconstruct(packed: PackedFleet, *, interpret=None,
-                      use_kernel: bool = True):
+                      use_kernel: bool = True, mesh="auto"):
     """Reconstruct instantaneous power for every stream in the fleet.
 
     Returns (power, times, valid) as (F, S) jax arrays: ``power[i, j]``
@@ -102,14 +127,33 @@ def fleet_reconstruct(packed: PackedFleet, *, interpret=None,
     One fused kernel call in the common case; rows with reordered
     timestamps (rare tool-jitter artifact) trigger a second, scan-based
     pass over the fleet.
+
+    ``mesh="auto"`` shards the fleet axis across all local devices
+    (``distributed.sharding.fleet_mesh``) whenever more than one device
+    is present and the padded row count divides evenly; pass ``None`` to
+    force single-device execution or an explicit 1-D ("fleet",) Mesh.
     """
+    from repro.distributed.sharding import (fleet_mesh,
+                                            fleet_rows_divisible)
     interpret = auto_interpret(interpret)
     energy = jnp.asarray(packed.energy)
     times = jnp.asarray(packed.times)
-    power, valid, reordered = _fleet_fast(
-        energy, times, jnp.asarray(packed.wrap_period),
-        jnp.asarray(packed.n_samples), interpret=interpret,
-        use_kernel=use_kernel)
+    if mesh == "auto":
+        mesh = fleet_mesh()
+    if mesh is not None and not fleet_rows_divisible(mesh,
+                                                     packed.shape[0]):
+        mesh = None
+    if mesh is not None:
+        fast = _fleet_fast_sharded(mesh, interpret, use_kernel)
+        power, valid, reordered = fast(
+            energy, times,
+            jnp.asarray(packed.wrap_period).reshape(-1, 1),
+            jnp.asarray(packed.n_samples).reshape(-1, 1))
+    else:
+        power, valid, reordered = _fleet_fast(
+            energy, times, jnp.asarray(packed.wrap_period),
+            jnp.asarray(packed.n_samples), interpret=interpret,
+            use_kernel=use_kernel)
     if bool(np.any(np.asarray(reordered))):
         return _fleet_slow(energy, times, jnp.asarray(packed.valid),
                            jnp.asarray(packed.wrap_period),

@@ -179,6 +179,47 @@ class StreamingPhaseAccumulator:
         return np.asarray(self._acc)[:, :self.n_phases]
 
 
+_SHARDED_STEP_CACHE: dict = {}
+
+
+def _sharded_steps(mesh, interpret: bool, use_kernel: bool):
+    """(step, step_first) with the fused kernel row-sharded over ``mesh``.
+
+    The attribution kernel is row-independent (each stream's ΔE/Δt and
+    phase overlaps touch only its own row; the phase table is
+    replicated), so the fleet axis partitions with zero collectives.
+    """
+    from repro.distributed.sharding import fleet_shard_map
+    key = (mesh, interpret, use_kernel)
+    fns = _SHARDED_STEP_CACHE.get(key)
+    if fns is not None:
+        return fns
+
+    def block(t_aug, e_aug, wrap_row, phases):
+        if use_kernel:
+            return fleet_attribute_kernel(t_aug, e_aug, wrap_row, phases,
+                                          interpret=interpret)
+        return fleet_attribute_ref(t_aug, e_aug, wrap_row, phases)
+
+    inner = fleet_shard_map(block, mesh, n_in=4, n_out=1,
+                            replicated_in=(3,))
+
+    @jax.jit
+    def step_first(t_chunk, e_chunk, period, phases, acc):
+        energy = inner(t_chunk, e_chunk, period[:, None], phases)
+        return acc + energy, t_chunk[:, -1:], e_chunk[:, -1:]
+
+    @jax.jit
+    def step(t_chunk, e_chunk, t_carry, e_carry, period, phases, acc):
+        t_aug = jnp.concatenate([t_carry, t_chunk], axis=1)
+        e_aug = jnp.concatenate([e_carry, e_chunk], axis=1)
+        energy = inner(t_aug, e_aug, period[:, None], phases)
+        return acc + energy, t_aug[:, -1:], e_aug[:, -1:]
+
+    _SHARDED_STEP_CACHE[key] = (step, step_first)
+    return step, step_first
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
 def _stream_step_first(t_chunk, e_chunk, period, phases, acc, *,
                        interpret=False, use_kernel=True):
@@ -222,11 +263,18 @@ class FleetStream:
 
     def __init__(self, phases, n_streams: int, wrap_period=None, *,
                  dtype=np.float32, interpret=None,
-                 use_kernel: bool = True):
+                 use_kernel: bool = True, mesh="auto"):
+        from repro.distributed.sharding import (fleet_mesh,
+                                                fleet_rows_divisible)
         self.phases = jnp.asarray(pad_phases(phases, dtype))
         self.n_phases = len(np.asarray(phases).reshape(-1, 2))
         self.interpret = auto_interpret(interpret)
         self.use_kernel = use_kernel
+        if mesh == "auto":
+            mesh = fleet_mesh()
+        if mesh is not None and not fleet_rows_divisible(mesh, n_streams):
+            mesh = None
+        self.mesh = mesh
         wp = (np.zeros((n_streams,), dtype) if wrap_period is None
               else np.asarray(wrap_period, dtype))
         self._period = jnp.asarray(wp)
@@ -249,6 +297,17 @@ class FleetStream:
                                      carry_t, carry_e)
         t = jnp.asarray(t_np)
         e = jnp.asarray(e_np)
+        if self.mesh is not None:
+            sh_step, sh_first = _sharded_steps(self.mesh, self.interpret,
+                                               self.use_kernel)
+            if first:
+                self._acc, self._t_carry, self._e_carry = sh_first(
+                    t, e, self._period, self.phases, self._acc)
+            else:
+                self._acc, self._t_carry, self._e_carry = sh_step(
+                    t, e, self._t_carry, self._e_carry, self._period,
+                    self.phases, self._acc)
+            return self
         if first:
             self._acc, self._t_carry, self._e_carry = _stream_step_first(
                 t, e, self._period, self.phases, self._acc,

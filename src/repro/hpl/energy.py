@@ -68,15 +68,53 @@ def fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4, seed0=0,
                                  chunk=chunk)
 
 
+def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
+                         seed0=0, sensors_per_chip=3, interpret=None):
+    """Per-node phase energies from FUSED cross-sensor streams.
+
+    Where ``fleet_energize`` trusts chip0's energy counter alone, this
+    aligns and inverse-variance-fuses chip0's whole sensor group per
+    node (on-chip counter + on-chip filtered power + off-chip PM, NIC
+    offsets and upstream slope calibrated out) through ``repro.align``
+    in ONE batched call across all nodes, then attributes on the fused
+    power — the paper's §V-B time-aligned multi-sensor validation
+    applied to the MxP accounting.  Returns one [PhaseEnergy] per node.
+    """
+    from repro.align import attribute_energy_fused
+    from repro.core.calibration import nic_rail_corrections
+    shifted, truth = phases_and_truth(tracer)
+    # default 3: on-chip counter + on-chip power + off-chip PM — one
+    # stream per scope (the two pm_accel0 views of the same tray PM
+    # only join at sensors_per_chip >= 4, to avoid double-weighting
+    # the off-chip scope)
+    wanted = ["chip0_energy", "chip0_power_inst", "pm_accel0_power",
+              "pm_accel0_energy", "chip0_power_avg"][:max(sensors_per_chip,
+                                                          1)]
+    groups = []
+    for node in range(n_nodes):
+        fabric = NodeFabric(chip_truths=[truth] * n_chips)
+        traces = fabric.sample_all(ToolSpec(), seed=seed0 + node)
+        groups.append([traces[n] for n in wanted])
+    return attribute_energy_fused(groups, shifted, reference=truth,
+                                  corrections=nic_rail_corrections(),
+                                  interpret=interpret)
+
+
 def mxp_energy_report(full_tracer: RegionTracer, mxp_tracer: RegionTracer,
-                      n_nodes, *, use_fleet=True) -> dict:
+                      n_nodes, *, use_fleet=True, use_fused=False) -> dict:
     """§V-B2 table: fleet-wide full- vs mixed-precision energy accounting.
 
     Attributes both runs across ``n_nodes`` simulated nodes via the fleet
     path and decomposes the saving into time-to-solution vs power.
+    ``use_fused=True`` accounts on cross-sensor fused streams
+    (``fused_fleet_energize``) instead of the single chip0 counter.
     """
-    pe_full = fleet_energize(full_tracer, n_nodes, use_fleet=use_fleet)
-    pe_mxp = fleet_energize(mxp_tracer, n_nodes, use_fleet=use_fleet)
+    if use_fused:
+        pe_full = fused_fleet_energize(full_tracer, n_nodes)
+        pe_mxp = fused_fleet_energize(mxp_tracer, n_nodes)
+    else:
+        pe_full = fleet_energize(full_tracer, n_nodes, use_fleet=use_fleet)
+        pe_mxp = fleet_energize(mxp_tracer, n_nodes, use_fleet=use_fleet)
     e_full = [sum(p.energy_j for p in row) for row in pe_full]
     e_mxp = [sum(p.energy_j for p in row) for row in pe_mxp]
     dec = split_energy_savings(pe_full[0], pe_mxp[0])

@@ -8,6 +8,8 @@ interpret=True mode on CPU; on TPU the same BlockSpecs drive MXU/VMEM.
   power_reconstruct — dE/dt + wraparound over (devices x samples) traces
   phase_integrate   — segmented per-phase energy integration
   fleet_attribute   — fused dE/dt + phase integration for streamed chunks
+  grid_resample     — masked searchsorted + hold/linear regrid (alignment)
+  xcorr_align       — lag-bank normalized cross-correlation (delay est.)
   flash_attention   — causal GQA flash attention (+gemma2 softcap)
   ssm_scan          — selective-scan (mamba) inner recurrence
 """

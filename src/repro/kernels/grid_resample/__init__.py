@@ -1,0 +1,11 @@
+"""Batched masked searchsorted + hold/linear regridding (repro.align).
+
+Resamples every (fleet, samples) stream onto one shared uniform grid in a
+single call — the cross-sensor alignment primitive: per-row delay shifts
+are applied to the grid inside the kernel so delay-corrected comparison
+costs nothing extra.
+"""
+from repro.kernels.grid_resample.kernel import grid_resample_kernel  # noqa
+from repro.kernels.grid_resample.ops import grid_resample  # noqa: F401
+from repro.kernels.grid_resample.ref import (grid_resample_ref,  # noqa
+                                             searchsorted_rows)

@@ -1,0 +1,70 @@
+"""Fleet-wide masked searchsorted + hold/linear regrid kernel.
+
+One call resamples every stream in the padded (fleet, samples) block onto
+a shared uniform grid, with a per-row delay shift applied to the query
+points — the alignment subsystem's inner primitive (regrid once to
+estimate delays, regrid again delay-corrected to fuse).
+
+Tiling: grid over (row blocks × grid blocks); each (block_rows, S) stream
+tile stays in VMEM across its grid blocks while a branch-free vectorized
+binary search (``searchsorted_rows``: log2(S)+1 compare/halve steps, no
+data-dependent control flow) resolves all (row, grid-point) lookups at
+once.  The search and interpolation math is shared verbatim with the jnp
+oracle (`ref.py`) and the float64 host mirror (`align.regrid`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import auto_block_rows
+from repro.kernels.grid_resample.ref import grid_resample_ref
+
+
+def _gr_kernel(t_ref, v_ref, n_ref, f_ref, g_ref, d_ref, o_ref, m_ref, *,
+               mode: str):
+    out, mask = grid_resample_ref(t_ref[...], v_ref[...], n_ref[...],
+                                  f_ref[...], g_ref[...], d_ref[...],
+                                  mode=mode)
+    o_ref[...] = out
+    m_ref[...] = mask
+
+
+def grid_resample_kernel(times, values, n_row, first_row, grid, delays, *,
+                         mode: str = "hold", block_rows=None,
+                         block_grid: int = 512, interpret: bool = False):
+    """times/values: (F, S); n_row/first_row/delays: (F, 1); grid: (G, 1)
+    -> (out, mask) of shape (F, G).
+
+    ``out[i, g]`` is stream i held (or linearly interpolated) at
+    ``grid[g] + delays[i]``; ``mask`` marks in-span grid points.  G must
+    be a multiple of ``block_grid`` (the public op pads).
+    """
+    f, s = times.shape
+    g = grid.shape[0]
+    block_rows = auto_block_rows(f, block_rows, interpret)
+    block_grid = g if interpret else min(block_grid, g)
+    assert f % block_rows == 0 and g % block_grid == 0
+    grid_steps = (f // block_rows, g // block_grid)
+    return pl.pallas_call(
+        functools.partial(_gr_kernel, mode=mode),
+        grid=grid_steps,
+        in_specs=[
+            pl.BlockSpec((block_rows, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_rows, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_grid, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, block_grid), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_grid), lambda i, j: (i, j)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((f, g), values.dtype),
+                   jax.ShapeDtypeStruct((f, g), jnp.bool_)],
+        interpret=interpret,
+    )(times, values, n_row, first_row, grid, delays)

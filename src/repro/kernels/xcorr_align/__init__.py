@@ -1,0 +1,9 @@
+"""Fleet-wide normalized cross-correlation against a lag bank (repro.align).
+
+Slides every co-gridded sensor stream against a reference signal (the
+known square-wave phase schedule, or a chosen reference stream) and
+scores each candidate lag — one MXU matmul per (row, lag) tile.
+"""
+from repro.kernels.xcorr_align.kernel import xcorr_align_kernel  # noqa
+from repro.kernels.xcorr_align.ops import make_refbank, xcorr_scores  # noqa
+from repro.kernels.xcorr_align.ref import xcorr_scores_ref  # noqa: F401

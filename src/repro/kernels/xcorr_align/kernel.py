@@ -1,0 +1,53 @@
+"""Lag-bank cross-correlation kernel: delay estimation as one matmul.
+
+Rather than rolling each stream by every candidate lag (a gather per lag),
+the reference is expanded ONCE on the host side into a (lags, grid) bank
+of shifted copies; scoring every (stream, lag) pair is then a single
+(F, G) x (G, L) contraction that maps straight onto the MXU, with the
+mean-centering and normalization fused into the same VMEM pass.
+
+Tiling: grid over (row blocks x lag blocks); the (block_rows, G) stream
+tile is reused across all lag blocks, each (block_lags, G) bank tile is
+read once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import auto_block_rows
+from repro.kernels.xcorr_align.ref import xcorr_scores_ref
+
+
+def _xc_kernel(x_ref, m_ref, rb_ref, o_ref):
+    o_ref[...] = xcorr_scores_ref(x_ref[...], m_ref[...], rb_ref[...])
+
+
+def xcorr_align_kernel(x, m, refbank, *, block_rows=None,
+                       block_lags: int = 128, interpret: bool = False):
+    """x/m: (F, G) streams + validity; refbank: (L, G) shifted references
+    -> (F, L) normalized correlation scores.
+
+    L must be a multiple of ``block_lags`` (the public op pads with
+    all-zero bank rows, whose scores the eps-guarded norm sends to 0).
+    """
+    f, g = x.shape
+    lags = refbank.shape[0]
+    block_rows = auto_block_rows(f, block_rows, interpret)
+    block_lags = lags if interpret else min(block_lags, lags)
+    assert f % block_rows == 0 and lags % block_lags == 0
+    grid = (f // block_rows, lags // block_lags)
+    return pl.pallas_call(
+        _xc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, g), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_rows, g), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_lags, g), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_lags),
+                               lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((f, lags), x.dtype),
+        interpret=interpret,
+    )(x, m, refbank)

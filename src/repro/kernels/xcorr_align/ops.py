@@ -1,0 +1,57 @@
+"""Public API: lag-bank construction + batched correlation scores."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xcorr_align.kernel import xcorr_align_kernel
+from repro.kernels.xcorr_align.ref import xcorr_scores_ref
+
+LAG_ALIGN = 128
+ROW_ALIGN = 8          # compiled row tiling (matches fleet packing)
+
+
+@functools.partial(jax.jit, static_argnames=("max_lag",))
+def make_refbank(ref, *, max_lag: int):
+    """Reference (G,) -> (2*max_lag+1, G) bank of shifted centered copies.
+
+    ``refbank[l, g] = ref_c[g - (l - max_lag)]`` with zeros shifted in, so
+    a stream that lags the reference by d grid steps peaks at row
+    ``max_lag + d``.
+    """
+    g = ref.shape[0]
+    ref_c = ref - jnp.mean(ref)
+    lags = jnp.arange(-max_lag, max_lag + 1)               # (L,)
+    src = jnp.arange(g)[None, :] - lags[:, None]           # (L, G)
+    ok = (src >= 0) & (src < g)
+    return jnp.where(ok, jnp.take(ref_c, jnp.clip(src, 0, g - 1)), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def xcorr_scores(x, m, refbank, *, interpret: bool = False,
+                 use_kernel: bool = True):
+    """(F, G) streams + mask vs (L, G) bank -> (F, L) scores.
+
+    Pads L to ``LAG_ALIGN`` and F to ``ROW_ALIGN`` for the kernel's
+    tiling (compiled backends tile rows in blocks of 8; all-zero padding
+    rows score 0 through the eps-guarded norms) and slices both back.
+    """
+    m = m.astype(x.dtype)
+    if not use_kernel:
+        return xcorr_scores_ref(x, m, refbank)
+    f = x.shape[0]
+    lags = refbank.shape[0]
+    pad_l = (-lags) % LAG_ALIGN
+    if pad_l:
+        refbank = jnp.concatenate(
+            [refbank, jnp.zeros((pad_l, refbank.shape[1]),
+                                refbank.dtype)])
+    pad_f = (-f) % ROW_ALIGN if f > ROW_ALIGN else 0
+    if pad_f:
+        z = jnp.zeros((pad_f, x.shape[1]), x.dtype)
+        x = jnp.concatenate([x, z])
+        m = jnp.concatenate([m, z])
+    scores = xcorr_align_kernel(x, m, refbank, interpret=interpret)
+    return scores[:f, :lags]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the lag-bank cross-correlation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def xcorr_scores_ref(x, m, refbank, *, xp=jnp):
+    """Normalized correlation of each stream against each lagged reference.
+
+    x: (F, G) co-gridded streams; m: (F, G) validity (0/1 float);
+    refbank: (L, G) lag-shifted, mean-centered reference rows
+    (``refbank[l, g] = ref[g - lag_l]``, zero outside the window).
+
+    Returns (F, L) scores in [-1, 1]:
+        score[f, l] = <(x_f - mean_f)·m_f, refbank_l> / (‖·‖ ‖·‖)
+    Streams are mean-centered over their own valid span so counter
+    baselines and static offsets (NIC rail, PM upstream) cancel; the peak
+    over l locates the stream's lag against the reference.  Shared by the
+    Pallas kernel, this oracle, and (xp=numpy) the float64 host mirror.
+    """
+    cnt = xp.maximum(xp.sum(m, axis=1, keepdims=True), 1.0)
+    mean = xp.sum(x * m, axis=1, keepdims=True) / cnt
+    xc = (x - mean) * m                                   # (F, G)
+    den_x = xp.sqrt(xp.sum(xc * xc, axis=1, keepdims=True))   # (F, 1)
+    den_r = xp.sqrt(xp.sum(refbank * refbank, axis=1))[None, :]  # (1, L)
+    num = xc @ refbank.T                                  # (F, L) MXU
+    return num / (den_x * den_r + 1e-12)

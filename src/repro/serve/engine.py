@@ -93,7 +93,8 @@ class ServeEngine:
         return results
 
     def attribute_phases(self, traces, *, corrections=None, depth=0,
-                         t_shift=0.0, use_fleet=True, chunk=1024):
+                         t_shift=0.0, use_fleet=True, chunk=1024,
+                         fuse=False, reference=None):
         """Per-phase energy for the engine's recorded serving phases.
 
         traces: {name: SensorTrace} (e.g. ``NodeFabric.sample_all``) or a
@@ -103,10 +104,27 @@ class ServeEngine:
         {trace_name: [PhaseEnergy]} for dict input, or a list of
         [PhaseEnergy] rows (input order) for list input — trace names
         need not be unique there.
+
+        ``fuse=True`` (dict input only) instead groups the traces by
+        device, time-aligns and inverse-variance-fuses every sensor
+        observing each device (``repro.align``), and attributes on the
+        fused streams — returns {device: [PhaseEnergy]}.  ``reference``
+        optionally passes the known phase schedule (PiecewisePower) for
+        delay estimation; default is each device's first counter.
         """
-        from repro.core.attribution import attribute_energy_many
         phases = [(n, a + t_shift, b + t_shift)
                   for n, a, b in self.tracer.phases(depth=depth)]
+        if fuse:
+            assert isinstance(traces, dict), \
+                "fuse=True groups by sensor name and needs dict input"
+            from repro.align import (attribute_energy_fused,
+                                     group_traces_by_device)
+            groups = group_traces_by_device(traces)
+            rows = attribute_energy_fused(list(groups.values()), phases,
+                                          corrections=corrections,
+                                          reference=reference)
+            return dict(zip(groups.keys(), rows))
+        from repro.core.attribution import attribute_energy_many
         as_dict = isinstance(traces, dict)
         trs = list(traces.values()) if as_dict else list(traces)
         rows = attribute_energy_many(trs, phases, corrections=corrections,

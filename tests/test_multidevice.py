@@ -187,6 +187,67 @@ def test_elastic_restore_across_mesh_shapes():
     """)
 
 
+def test_fleet_sharded_matches_host_oracle():
+    """The packed fleet axis auto-shards over an 8-device CPU mesh
+    (reconstruction AND streamed attribution) and stays ≤1e-5 of the
+    float64 host oracle / identical to the unsharded path."""
+    run_py("""
+        import numpy as np, jax
+        assert jax.device_count() == 8
+        from repro.distributed.sharding import fleet_mesh
+        from repro.fleet import (FleetStream, fleet_reconstruct,
+                                 fleet_reconstruct_host, pack_traces)
+        from repro.core.measurement_model import SensorSpec
+        from repro.core.sensors import SensorTrace
+
+        rng = np.random.default_rng(0)
+        traces = []
+        for i in range(16):
+            k = 300 - int(rng.integers(0, 40))
+            dt = rng.uniform(0.5e-3, 2e-3, k)
+            t = np.cumsum(dt); p = rng.uniform(40, 260, k)
+            e = np.cumsum(p * dt)
+            wb = 24 if i % 2 == 0 else 0
+            spec = SensorSpec(name=f"s{i}", scope="chip",
+                              kind="energy_cum", quantum=1e-6,
+                              wrap_bits=wb)
+            if wb:
+                e = np.mod(e, (2.0 ** wb) * spec.quantum)
+            traces.append(SensorTrace(spec.name, spec, t + 1e-4, t, e))
+
+        packed = pack_traces(traces)
+        mesh = fleet_mesh()
+        assert mesh is not None and mesh.shape["fleet"] == 8
+        power, times, valid = fleet_reconstruct(packed)  # auto-sharded
+        p1, _, v1 = fleet_reconstruct(packed, mesh=None)
+        ph, th, vh = fleet_reconstruct_host(packed)
+        pj, vj = np.asarray(power), np.asarray(valid)
+        assert (vj == vh).all() and (vj == np.asarray(v1)).all()
+        rel = (np.abs(pj[vj] - ph[vh])
+               / np.maximum(np.abs(ph[vh]), 1.0)).max()
+        assert rel <= 1e-5, rel
+        np.testing.assert_allclose(pj, np.asarray(p1), rtol=1e-6,
+                                   atol=1e-5)
+
+        span = float(max(tr.t_measured[-1] for tr in traces))
+        edges = np.linspace(0.0, span, 5)
+        wins = list(zip(edges[:-1], edges[1:]))
+        s_sh = FleetStream(wins, packed.shape[0],
+                           wrap_period=packed.wrap_period)   # auto mesh
+        s_un = FleetStream(wins, packed.shape[0],
+                           wrap_period=packed.wrap_period, mesh=None)
+        assert s_sh.mesh is not None
+        for lo in range(0, packed.shape[1], 100):
+            s_sh.update(packed.times[:, lo:lo + 100],
+                        packed.energy[:, lo:lo + 100])
+            s_un.update(packed.times[:, lo:lo + 100],
+                        packed.energy[:, lo:lo + 100])
+        np.testing.assert_allclose(s_sh.totals(), s_un.totals(),
+                                   rtol=1e-6, atol=1e-4)
+        print("fleet sharding OK")
+    """)
+
+
 def test_dryrun_single_cell_tiny_mesh():
     """The dry-run machinery itself (lower+compile+costs) on a 2x4 mesh."""
     run_py("""

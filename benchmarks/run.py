@@ -25,6 +25,7 @@ BENCHES = [
     "bench_reconstruction",     # §III-A2 + fastotf2 throughput
     "bench_fleet",              # fleet batched vs per-trace numpy loop
     "bench_align",              # cross-sensor align+fuse vs host loop
+    "bench_stream",             # streaming fused pipeline vs batch replay
     "bench_hpl",                # Fig. 7 + energy table
     "bench_hpg",                # Fig. 8
     "bench_overhead",           # §II-D <1% overhead

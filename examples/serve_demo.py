@@ -1,12 +1,17 @@
 """Serve a small model with batched requests + phase-level attribution.
 
-Three attribution paths over the same serving run:
+Four attribution paths over the same serving run:
   1. synchronous fleet: all chip counters through one batched ΔE/Δt call,
   2. async ingest: rocm-smi-style reader threads feeding FleetStream
      chunks ONLINE (the ROADMAP's async-ingest item) with a conservation
      check on shutdown,
   3. fused: every sensor observing each chip time-aligned and
-     inverse-variance fused (repro.align) before attribution.
+     inverse-variance fused (repro.align) before attribution — batch,
+     and replayed through the streaming stage pipeline
+     (``attribute_phases(fuse=True, streaming=True)``),
+  4. streaming fused ONLINE: multi-sensor reader threads (counter +
+     filtered power per chip) feeding ``StreamingFusedPipeline`` —
+     delays tracked on sliding windows while the run streams.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -58,17 +63,20 @@ class SimulatedSMIReader:
 
 
 class AsyncFleetIngest:
-    """LiveSampler-style polling thread feeding ``FleetStream.update``.
+    """LiveSampler-style polling thread feeding a streaming attributor.
 
     A dedicated thread polls every reader at a fixed cadence, buffers
     per-device samples, and flushes fixed-width (fleet, CHUNK) blocks
-    into the streaming attributor; rows short of a full chunk pad by
-    replicating their last sample (zero-width intervals — exactly zero
-    energy, the packing subsystem's convention).  ``stop()`` drains the
-    buffers and joins the thread.
+    into ``stream.update`` — a ``FleetStream`` (counter chunks) or a
+    ``StreamingFusedPipeline`` (mixed multi-sensor chunks); rows short
+    of a full chunk pad by replicating their last sample (zero-width
+    intervals — exactly zero energy, the packing subsystem's
+    convention), which also keeps every row's wall-clock span aligned —
+    the contract the streaming regrid frontier relies on.  ``stop()``
+    drains the buffers and joins the thread.
     """
 
-    def __init__(self, readers, stream: FleetStream, t0: float,
+    def __init__(self, readers, stream, t0: float,
                  chunk: int = CHUNK, interval_s: float = 2e-3):
         self._readers = readers
         self._stream = stream
@@ -231,6 +239,51 @@ def main():
     for dev, row in fused_rows.items():
         line = "  ".join(f"{p.phase} {p.energy_j:7.2f} J" for p in row)
         print(f"  {dev}: {line}")
+
+    # same numbers through the streaming stage pipeline (replayed in
+    # chunks, O(fleet x chunk) memory, delays tracked on windows)
+    fused_stream = engine.attribute_phases(traces, t_shift=lead,
+                                           fuse=True, reference=truth,
+                                           streaming=True, chunk=512)
+    print("per-phase serving energy (FUSED, streaming replay):")
+    for dev, row in fused_stream.items():
+        line = "  ".join(f"{p.phase} {p.energy_j:7.2f} J" for p in row)
+        print(f"  {dev}: {line}")
+
+    # ---- streaming fused ONLINE: multi-sensor async ingest ------------
+    # one reader per SENSOR (counter + IIR power per chip), all feeding
+    # the full Ingest->Reconstruct->AlignTrack->Regrid/Fuse->PhaseAttr
+    # chain while the replay clock runs
+    from repro.fleet import StreamingFusedPipeline
+    wanted = [(f"chip{i}_energy", f"chip{i}_power_inst")
+              for i in range(4)]
+    flat = [traces[n] for pair in wanted for n in pair]
+    t0f = min(float(tr.t_measured[0]) for tr in flat)
+    cad = np.median(np.diff(flat[0].t_measured))
+    pipe = StreamingFusedPipeline(
+        [2] * 4, [(a + lead - t0f, b + lead - t0f) for _, a, b in phases],
+        grid_origin=0.0, grid_step=0.5 * float(cad),
+        kind_row=[tr.spec.is_cumulative for tr in flat],
+        wrap_period=[(2.0 ** tr.spec.wrap_bits) * tr.spec.quantum
+                     if tr.spec.wrap_bits else 0.0 for tr in flat],
+        reference=lambda t: truth.power_at(t + t0f),
+        window=2048, hop=512, max_lag=256, tail=1024)
+    readers = [SimulatedSMIReader(tr) for tr in flat]
+    ingest = AsyncFleetIngest(readers, pipe, t0f).start()
+    while not all(r.drained for r in readers):
+        time.sleep(0.01)
+    ingest.stop()
+    pipe.finalize()
+    totals = pipe.totals()
+    print(f"\nstreaming fused ONLINE ({ingest.n_polls} polls -> "
+          f"{ingest.n_chunks} chunks, {len(pipe.delay_history)} delay "
+          f"re-estimates):")
+    for d in range(4):
+        line = "  ".join(f"{n} {e:7.2f} J"
+                         for (n, _, _), e in zip(phases, totals[d]))
+        print(f"  device{d}: {line}")
+    d_ms = ", ".join(f"{x * 1e3:+.2f}" for x in pipe.delays())
+    print(f"  tracked delays (ms): {d_ms}")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,14 @@ class SensorSpec:
     # itself — the alignment subsystem (repro.align) blind-estimates it
     # from square-wave cross-correlation and tests recover this value.
     delay_s: float = 0.0
+    # linear sensor-clock drift in parts-per-million: the reported
+    # t_measured runs FAST by drift_ppm, so a feature at true time T
+    # carries timestamp T + (T - t0) * drift_ppm * 1e-6 — the stream's
+    # effective lag against the schedule GROWS linearly during the run
+    # (total lag(t) = delay_s + (t - t0) * drift_ppm * 1e-6).  A batch
+    # whole-trace estimate can only see the mid-run average; the online
+    # AlignTrack stage (fleet.pipeline) follows it window by window.
+    drift_ppm: float = 0.0
     quantum: float = 1.0          # value quantization (uJ for energy, W)
     wrap_bits: int = 0            # cumulative counters wrap at 2**bits
     # stage 2: driver publication

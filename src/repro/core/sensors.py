@@ -53,13 +53,21 @@ def produce(spec: SensorSpec, truth: PiecewisePower, rng) -> tuple:
 
     ``spec.delay_s`` models fixed sensing latency: the sample published
     with timestamp ``tm`` reflects the physical state at ``tm - delay_s``
-    (clamped at the start of the run).  ``delay_s=0`` is bit-identical to
-    the undelayed pipeline.
+    (clamped at the start of the run).  ``spec.drift_ppm`` models a
+    sensor clock running fast/slow by that many parts-per-million: the
+    reported timestamps stretch linearly from the run start, so the
+    stream's effective lag against wall time grows as
+    ``(t - t0) * drift_ppm * 1e-6`` on top of ``delay_s``.  Zero for
+    both is bit-identical to the undrifted/undelayed pipeline.
     """
     t0, t1 = truth.t0, truth.t1
     tm = _jittered_grid(t0, t1, spec.production_interval_s,
                         spec.production_jitter_s, rng)
     te = np.maximum(tm - spec.delay_s, t0) if spec.delay_s else tm
+    if spec.drift_ppm:
+        # values are measured at true time te; only the REPORTED clock
+        # drifts (tm stays monotonic — the stretch factor is positive)
+        tm = tm + (tm - t0) * (spec.drift_ppm * 1e-6)
     if spec.kind == "energy_cum":
         e = truth.energy_between(t0, te) * spec.scale \
             + spec.offset_w * (te - t0)

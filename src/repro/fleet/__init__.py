@@ -9,14 +9,21 @@ subsystem is the batched counterpart of ``repro.core.reconstruction`` /
                arrays with validity masks (pure memcpy, no per-trace math)
   reconstruct— dedup -> unwrap -> ΔE/Δt for the whole fleet in ONE jitted
                call through the ``power_reconstruct`` Pallas kernel
-  streaming  — online, chunked per-phase energy accumulation through the
-               ``phase_integrate`` Pallas kernel: O(fleet × chunk) device
+  pipeline   — the composable streaming stage layer: Ingest ->
+               Reconstruct -> AlignTrack -> Regrid/Fuse ->
+               PhaseAttribute, every stage one (fleet, chunk) window +
+               an explicit carry dataclass; online delay tracking and
+               streaming fused attribution live here
+  streaming  — ``FleetStream`` / ``StreamingPhaseAccumulator``: thin
+               pre-built two-stage pipelines (fused ``fleet_attribute``
+               / ``phase_integrate`` kernels), O(fleet × chunk) device
                memory regardless of run length
   api        — trace-level entry points mirroring the per-trace host API
                (which remains the parity oracle)
 
 Every future scaling PR (sharding, async ingest, multi-node) composes with
-the padded-fleet interface here instead of per-trace Python loops.
+the padded-fleet interface and the stage pipeline here instead of
+per-trace Python loops.
 """
 from repro.fleet.packing import (PackedFleet, pack_traces,  # noqa: F401
                                  unpack_series)
@@ -24,5 +31,11 @@ from repro.fleet.reconstruct import (fleet_reconstruct,  # noqa: F401
                                      fleet_reconstruct_host)
 from repro.fleet.streaming import (FleetStream,  # noqa: F401
                                    StreamingPhaseAccumulator)
+from repro.fleet.pipeline import (AlignTrackStage,  # noqa: F401
+                                  IngestStage, PhaseIntegrateStage,
+                                  ReconstructStage, RegridFuseStage,
+                                  StreamPipeline, StreamingFusedPipeline,
+                                  attribute_energy_fused_streaming,
+                                  pack_stream_rows)
 from repro.fleet.api import (attribute_energy_fleet,  # noqa: F401
                              attribute_energy_fused, fleet_power_series)

@@ -71,7 +71,8 @@ def attribute_energy_fleet(traces, phases, *, corrections=None,
     return out
 
 
-def attribute_energy_fused(trace_groups, phases, **kw):
+def attribute_energy_fused(trace_groups, phases, *, streaming=False,
+                           **kw):
     """Per-phase energy on the FUSED cross-sensor stream of each device.
 
     trace_groups: [[SensorTrace, ...], ...] — all sensors observing one
@@ -81,6 +82,18 @@ def attribute_energy_fused(trace_groups, phases, **kw):
     by every sensor scope instead of a single counter; see
     ``repro.align`` for the keyword surface (reference, corrections,
     grid_step, ...).  Returns one ``[PhaseEnergy]`` per group.
+
+    ``streaming=True`` routes through the stage pipeline
+    (``fleet.pipeline.attribute_energy_fused_streaming``): O(fleet x
+    chunk) memory, per-sensor delays re-estimated online; matches the
+    batch path to <=1e-5 when given the same grid and fixed delays.
+    The streaming path supports the hold-resample convention only and
+    its own keyword surface (chunk, window, hop, ema, tail, track, ...)
+    — batch-only keywords such as ``mode`` or ``align`` raise TypeError.
     """
+    if streaming:
+        from repro.fleet.pipeline import attribute_energy_fused_streaming
+        return attribute_energy_fused_streaming(trace_groups, phases,
+                                                **kw)
     from repro.align import attribute_energy_fused as _fused
     return _fused(trace_groups, phases, **kw)

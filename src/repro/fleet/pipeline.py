@@ -1,0 +1,1435 @@
+"""Composable streaming stage pipeline (streaming-first architecture).
+
+Every online path in the repo is a chain of small stages, each consuming
+one fixed-width (fleet, chunk) window plus an explicit carry-state
+dataclass, so the whole chain stays O(fleet x chunk) memory however long
+the run is:
+
+    Ingest -> Reconstruct -> AlignTrack -> Regrid/Fuse -> PhaseAttribute
+
+  Ingest       host-side chunk hygiene: reorder/duplicate repair
+               (``sanitize_chunk``) or valid-mask carry-forward, plus the
+               one-column carry that closes every hold interval across
+               chunk boundaries.  Emits a CLOSED window: (F, C+1) edges
+               whose column 0 is the previous window's last sample.
+  Reconstruct  per-row wrap-corrected dE/dt through the
+               ``power_reconstruct_rows`` Pallas kernel; power-sensor
+               rows pass through untouched (mixed fleets supported).
+  AlignTrack   ONLINE delay tracking: a per-stream sliding-window ring
+               buffer on a uniform grid feeds the ``xcorr_align`` lag
+               bank incrementally; per-window lag estimates are folded
+               into an exponential moving average so slow sensor clock
+               drift (``SensorSpec.drift_ppm``) is followed during the
+               run instead of averaged away.
+  Regrid/Fuse  carry-aware streaming ``grid_resample`` onto one shared
+               output grid (per-row delay-shifted queries, advancing
+               frontier) + the inverse-variance fusion statistics
+               (per-stream sample counts and squared residuals against
+               the cross-sensor mean), accumulated exactly as the batch
+               ``align.fusion.fuse_gridded`` defines them.
+  PhaseAttr    per-phase energy: the ``phase_integrate`` kernel for
+               plain power streams, or the fused accumulator that folds
+               each emitted grid window into per-(device, phase,
+               coverage-pattern, stream) integrals and finalizes with
+               the END-OF-RUN inverse-variance weights — so the
+               streamed result equals the batch ``align_and_fuse`` ->
+               ``attribute_energy_fused`` path to <=1e-5 without ever
+               materializing a full trace.
+
+Carry-state contract
+--------------------
+A stage owns exactly one carry dataclass; ``update`` consumes a window,
+advances the carry, and returns the window for the next stage (or None
+when nothing new can be emitted yet — e.g. the regrid frontier did not
+advance).  ``flush`` emits whatever the carry still holds at shutdown.
+Closed windows make every interval boundary explicit: sample j closes
+(t[j-1], t[j]] and column 0 is zero-width on the first window, so no
+stage ever needs to look behind the window it was handed.
+
+Batch is the special case: ``attribute_energy_fused_streaming`` replays
+packed traces through this chain in fixed-width chunks and matches the
+batch path; ``FleetStream`` / ``StreamingPhaseAccumulator``
+(fleet/streaming.py) are thin pre-built two-stage pipelines over the
+same Ingest/attribute stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+
+from repro.fleet.packing import ROW_ALIGN, _round_up, pack_traces
+from repro.fleet.reconstruct import auto_interpret
+
+# phase_integrate/fleet_attribute tile phases in blocks of 32; phase
+# tables are always padded UP to the tile (zero-width windows integrate
+# to exactly zero energy, so padding is free).
+PHASE_ALIGN = 32
+
+
+def pad_phases(phases, dtype=np.float32):
+    """(P, 2) [a, b) windows -> kernel-aligned array (zero-width padding).
+
+    Always rounds the phase count up to the PHASE_ALIGN tile so the
+    kernels' compiled block shape is uniform for ANY count — including
+    1 < p < 32, which the pre-pipeline code left unpadded (the kernels
+    then compiled a ragged (rows, p) lane tile; correct under interpret
+    but off the supported tiling on compiled backends).
+    """
+    ph = np.asarray(phases, dtype).reshape(-1, 2)
+    p = len(ph)
+    if p == 0:
+        raise ValueError("streaming attribution needs at least one phase "
+                         "window (got an empty phase list)")
+    pad = (-p) % PHASE_ALIGN
+    if pad:
+        ph = np.concatenate([ph, np.zeros((pad, 2), dtype)])
+    return ph
+
+
+def sanitize_chunk(times, energy, valid=None, carry_t=None, carry_e=None):
+    """Host-side ingest guard: make each row's hold edges non-decreasing.
+
+    Keeps a sample iff its timestamp strictly exceeds the running max of
+    everything (valid) before it, including the previous chunk's carry;
+    dropped samples (reordered reads, masked slots) are replaced by the
+    last kept (t, E) so they become zero-width and their dE telescopes
+    into the next kept interval.  The common all-monotonic case is a
+    single vectorized check with no copies.
+    """
+    t = np.asarray(times)
+    e = np.asarray(energy)
+    f, c = t.shape
+    if valid is not None and bool(np.all(valid)):
+        valid = None
+    # duplicates (==) already replicate the previous publication and need
+    # no repair; only strict decreases and masked slots do.  Any reorder
+    # episode starts with an adjacent decrease, so this cheap check is
+    # sufficient to route to the repair path.
+    if valid is None \
+            and not (t[:, 1:] < t[:, :-1]).any() \
+            and (carry_t is None or not (t[:, :1] < carry_t).any()):
+        return t, e
+    lead = np.full((f, 1), -np.inf, t.dtype) if carry_t is None \
+        else np.asarray(carry_t, t.dtype)
+    tv = t if valid is None else np.where(valid, t, -np.inf)
+    run_max = np.maximum.accumulate(
+        np.concatenate([lead, tv], axis=1), axis=1)
+    keep = tv > run_max[:, :-1]
+    idx = np.broadcast_to(np.arange(c)[None, :], (f, c))
+    last = np.maximum.accumulate(np.where(keep, idx, -1), axis=1)
+    src = np.maximum(last, 0)
+    t_eff = np.take_along_axis(t, src, axis=1)
+    e_eff = np.take_along_axis(e, src, axis=1)
+    no_prev = last < 0                   # before the chunk's first kept
+    if carry_t is not None:
+        t_eff = np.where(no_prev, np.asarray(carry_t, t.dtype), t_eff)
+        e_eff = np.where(no_prev, np.asarray(carry_e, e.dtype), e_eff)
+    elif no_prev.any():
+        # first chunk: collapse the leading dropped run onto the first
+        # kept sample (zero width, zero energy)
+        first = np.argmax(keep, axis=1)[:, None]
+        t_eff = np.where(no_prev, np.take_along_axis(t, first, axis=1),
+                         t_eff)
+        e_eff = np.where(no_prev, np.take_along_axis(e, first, axis=1),
+                         e_eff)
+    return t_eff, e_eff
+
+
+def _maskfill_chunk(times, values, valid, carry_t, carry_v):
+    """Valid-mask carry-forward (StreamingPhaseAccumulator semantics).
+
+    Every slot takes the last VALID (t, v) at-or-before it; the carry
+    column (always valid) seeds rows whose chunk starts invalid.  Unlike
+    ``sanitize_chunk`` this keeps equal-timestamp valid samples — power
+    chunks arrive on already-monotone grids.  Pure gathers: identical
+    results on host and device.
+    """
+    t = np.asarray(times)
+    v = np.asarray(values)
+    f, c = t.shape
+    ok = np.concatenate([np.ones((f, 1), bool), np.asarray(valid, bool)],
+                        axis=1)
+    aug_t = np.concatenate([np.asarray(carry_t, t.dtype), t], axis=1)
+    aug_v = np.concatenate([np.asarray(carry_v, v.dtype), v], axis=1)
+    idx = np.broadcast_to(np.arange(c + 1)[None, :], (f, c + 1))
+    last = np.maximum.accumulate(np.where(ok, idx, 0), axis=1)
+    return (np.take_along_axis(aug_t, last, axis=1)[:, 1:],
+            np.take_along_axis(aug_v, last, axis=1)[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Window types passed between stages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClosedWindow:
+    """One (F, C+1) window of hold-interval EDGES.
+
+    Column 0 is the carry edge (previous window's last sample; a
+    zero-width duplicate of the first sample on the first window), so
+    sample j>=1 closes the interval (times[:, j-1], times[:, j]].
+    ``t_first[i]`` is row i's first DEFINED query time (+inf until
+    known): the first sample for raw power rows, the first
+    interval-closing edge for reconstructed counters — exactly the
+    ``SeriesRows.first`` convention of the batch path.
+    """
+    times: np.ndarray          # (F, C+1)
+    values: np.ndarray         # (F, C+1) cumulative J (counter) or W
+    t_first: np.ndarray        # (F,) float64
+
+
+@dataclasses.dataclass
+class GriddedWindow:
+    """Emitted slots [lo, lo+G) of the shared uniform output grid."""
+    lo: int                    # first slot index
+    grid: np.ndarray           # (G,) float64 slot times (pipeline time)
+    values: np.ndarray         # (n_streams, G) regridded power
+    mask: np.ndarray           # (n_streams, G) defined-span coverage
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: Ingest
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IngestCarry:
+    """Last sanitized hold edge per row (the one-column cross-chunk
+    state every streaming path shares)."""
+    t: np.ndarray              # (F, 1)
+    v: np.ndarray              # (F, 1)
+
+
+class IngestStage:
+    """Raw (times, values[, valid]) chunks -> sanitized closed windows.
+
+    mode="sanitize"  reorder/duplicate repair incl. masked slots
+                     (FleetStream / counter semantics);
+    mode="maskfill"  valid-mask carry-forward only, equal timestamps
+                     kept (StreamingPhaseAccumulator semantics).
+
+    kind_row (sanitize mode): True marks cumulative-counter rows, whose
+    defined span opens at the first interval-CLOSING edge (the first
+    strict timestamp advance — reconstruction's column 0 carries no
+    power); raw power rows open at their FIRST sample, matching the
+    batch ``SeriesRows.first`` convention.  None treats every row as a
+    counter (the FleetStream case, which never consults t_first).
+    """
+
+    def __init__(self, n_streams: int, *, mode: str = "sanitize",
+                 kind_row=None):
+        assert mode in ("sanitize", "maskfill")
+        self.mode = mode
+        self.n_streams = n_streams
+        self.kind_row = (None if kind_row is None
+                         else np.asarray(kind_row, bool).reshape(-1))
+        self.carry: IngestCarry = None
+        self._t_first = None
+
+    def reset(self):
+        self.carry = None
+        self._t_first = None
+        return self
+
+    def update(self, times, values, valid=None) -> ClosedWindow:
+        t = np.asarray(times)
+        v = np.asarray(values)
+        first = self.carry is None
+        if first:
+            # zero-width seed at the first VALID sample — seeding from a
+            # masked slot would turn its garbage timestamp into an edge
+            if valid is None:
+                seed_t, seed_v = t[:, :1], v[:, :1]
+            else:
+                fi = np.argmax(np.asarray(valid, bool), axis=1)[:, None]
+                seed_t = np.take_along_axis(t, fi, axis=1)
+                seed_v = np.take_along_axis(v, fi, axis=1)
+            self.carry = IngestCarry(t=seed_t, v=seed_v)
+            seed64 = seed_t[:, 0].astype(np.float64)
+            if self.mode == "maskfill":
+                # power rows: the first valid sample opens the span
+                self._t_first = seed64
+            elif self.kind_row is None:
+                self._t_first = np.full((t.shape[0],), np.inf)
+            else:
+                # counters wait for the first closing edge; power rows
+                # open at the seed (the later minimum() never undercuts)
+                self._t_first = np.where(self.kind_row, np.inf, seed64)
+        if self.mode == "sanitize":
+            t_eff, v_eff = sanitize_chunk(t, v, valid,
+                                          self.carry.t, self.carry.v)
+        elif valid is None:
+            t_eff, v_eff = t, v
+        else:
+            t_eff, v_eff = _maskfill_chunk(t, v, valid,
+                                           self.carry.t, self.carry.v)
+        t_aug = np.concatenate([self.carry.t, t_eff], axis=1)
+        v_aug = np.concatenate([self.carry.v, v_eff], axis=1)
+        if self.mode == "sanitize" and np.isinf(self._t_first).any():
+            # first strict advance past the seed = first closing edge
+            adv = t_aug > t_aug[:, :1]
+            j = np.argmax(adv, axis=1)
+            tf = np.where(adv.any(axis=1),
+                          t_aug[np.arange(len(j)), j].astype(np.float64),
+                          np.inf)
+            self._t_first = np.minimum(self._t_first, tf)
+        self.carry = IngestCarry(t=t_aug[:, -1:], v=v_aug[:, -1:])
+        return ClosedWindow(times=t_aug, values=v_aug,
+                            t_first=self._t_first)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: Reconstruct
+# ---------------------------------------------------------------------------
+
+class ReconstructStage:
+    """Counter rows -> instantaneous power via wrap-corrected dE/dt.
+
+    Stateless given closed windows (the carry edge closes the boundary
+    interval, so dE telescopes across chunks with no extra state).
+    ``kind_row`` marks counter rows; power rows pass through.  Device
+    path runs the ``power_reconstruct_rows`` Pallas kernel; the float64
+    host mirror computes the same formula in numpy.
+    """
+
+    def __init__(self, kind_row, wrap_row=None, *, interpret=None,
+                 use_kernel: bool = True, host: bool = False):
+        self.kind_row = np.asarray(kind_row, bool).reshape(-1)
+        f = len(self.kind_row)
+        self.wrap_row = (np.zeros((f, 1), np.float64) if wrap_row is None
+                         else np.asarray(wrap_row,
+                                         np.float64).reshape(f, 1))
+        self.interpret = auto_interpret(interpret)
+        self.use_kernel = use_kernel
+        self.host = host
+
+    def reset(self):
+        return self
+
+    def update(self, chunk: ClosedWindow) -> ClosedWindow:
+        t, v = chunk.times, chunk.values
+        if not self.kind_row.any():
+            return chunk
+        if self.host:
+            from repro.kernels.power_reconstruct.ref import wrapped_diff
+            de = wrapped_diff(v.astype(np.float64),
+                              self.wrap_row, xp=np)
+            dt = np.maximum(np.diff(t.astype(np.float64), axis=1), 1e-12)
+            power = np.pad(de / dt, ((0, 0), (1, 0)))
+        else:
+            power = np.asarray(_reconstruct_window(
+                t, v, self.wrap_row.astype(t.dtype),
+                interpret=self.interpret, use_kernel=self.use_kernel))
+        out_v = np.where(self.kind_row[:, None], power.astype(v.dtype), v)
+        return ClosedWindow(times=t, values=out_v, t_first=chunk.t_first)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def _reconstruct_window(t, v, wrap_row, *, interpret, use_kernel):
+    from repro.kernels.power_reconstruct.kernel import (
+        power_reconstruct_rows_kernel)
+    from repro.kernels.power_reconstruct.ref import (
+        reconstruct_power_rows_ref)
+    if use_kernel:
+        return power_reconstruct_rows_kernel(v, t, wrap_row,
+                                             interpret=interpret)
+    return reconstruct_power_rows_ref(v, t, wrap_row)
+
+
+# ---------------------------------------------------------------------------
+# Shared carry piece: raw-sample tails for window-crossing grid queries
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TailCarry:
+    """Last ``T`` raw samples per row + the newest time that slid out.
+
+    Grid queries shifted by per-row delays can land slightly BEFORE the
+    current window (the emit frontier trails the slowest stream); the
+    tail keeps enough history to resolve them.  ``dropped_t`` bounds
+    what the tail can still answer: a hold lookup needs every sample
+    AT/AFTER the query, so queries must stay > dropped_t.
+    """
+    t: np.ndarray              # (F, T)
+    v: np.ndarray              # (F, T)
+    dropped_t: np.ndarray      # (F,) float64
+
+
+class _RowTail:
+    def __init__(self, width: int):
+        self.width = width
+        self.carry: TailCarry = None
+
+    def reset(self):
+        self.carry = None
+        return self
+
+    def augmented(self, chunk: ClosedWindow):
+        """[-inf sentinel | tail | window] rows for ``grid_resample``.
+
+        The sentinel column neutralizes the op's own lower-span mask
+        (its t_first would otherwise be the arbitrary tail start); the
+        true per-row span mask is re-applied from ``chunk.t_first`` by
+        ``_query_grid``.  The sentinel is never selected by a lower
+        bound (first sample >= query) for any finite query.
+        """
+        t, v = chunk.times, chunk.values
+        f = t.shape[0]
+        sent_t = np.full((f, 1), -np.inf, t.dtype)
+        sent_v = np.zeros((f, 1), v.dtype)
+        if self.carry is None:
+            # zero-width replicas of the first edge: search-invisible
+            tail_t = np.repeat(t[:, :1], self.width, axis=1)
+            tail_v = np.repeat(v[:, :1], self.width, axis=1)
+            self.carry = TailCarry(t=tail_t, v=tail_v,
+                                   dropped_t=np.full((f,), -np.inf))
+        return (np.concatenate([sent_t, self.carry.t, t], axis=1),
+                np.concatenate([sent_v, self.carry.v, v], axis=1))
+
+    def advance(self, chunk: ClosedWindow):
+        """Slide the window into the tail (call after querying).
+
+        ``dropped_t`` only records dropped samples STRICTLY older than
+        the retained head: equal-time columns are zero-width replicas
+        whose original still answers the lower-bound lookup, and slow
+        rows are mostly such replicas.
+        """
+        t = np.concatenate([self.carry.t, chunk.times], axis=1)
+        v = np.concatenate([self.carry.v, chunk.values], axis=1)
+        gone = t[:, :-self.width].astype(np.float64)
+        head = t[:, -self.width].astype(np.float64)[:, None]
+        strict = np.where(gone < head, gone, -np.inf).max(axis=1) \
+            if gone.shape[1] else np.full((t.shape[0],), -np.inf)
+        dropped = np.maximum(self.carry.dropped_t, strict)
+        self.carry = TailCarry(t=t[:, -self.width:], v=v[:, -self.width:],
+                               dropped_t=dropped)
+
+    def check_reach(self, q_min: np.ndarray, what: str):
+        """Raise when a query needs samples older than the tail holds."""
+        bad = q_min <= self.carry.dropped_t
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"{what}: row {i} query at t={q_min[i]:.6f} reaches "
+                f"behind the {self.width}-sample tail (oldest answerable "
+                f"t>{self.carry.dropped_t[i]:.6f}); widen `tail` or "
+                f"reduce the delay range")
+
+
+def _query_grid(rows_t, rows_v, grid64, delays64, t_first, *,
+                interpret, use_kernel, host):
+    """Hold-resample all rows at ``grid + delay[row]`` -> (vals, mask).
+
+    Device path: the ``grid_resample`` kernel/op (queries formed in the
+    row dtype, exactly as the batch ``regrid_rows`` does, so streamed
+    and batch lookups compare the SAME float32 values at hold
+    discontinuities).  host=True: the float64 numpy mirror.
+    """
+    f, s = rows_t.shape
+    dtype = rows_t.dtype
+    n_row = np.full((f, 1), s, np.int32)
+    first_row = np.zeros((f, 1), np.int32)
+    g = np.asarray(grid64, np.float64).astype(dtype)
+    d = np.asarray(delays64, np.float64).astype(dtype).reshape(f, 1)
+    if host:
+        from repro.kernels.grid_resample.ref import grid_resample_ref
+        out, mask = grid_resample_ref(
+            rows_t.astype(np.float64), rows_v.astype(np.float64),
+            n_row, first_row, g.reshape(-1, 1).astype(np.float64),
+            d.astype(np.float64), mode="hold", xp=np)
+        ge = g[None, :].astype(np.float64) + d.astype(np.float64)
+    else:
+        import jax.numpy as jnp
+        from repro.kernels.grid_resample.ops import grid_resample
+        # pad the query count to a coarse multiple (replicating the last
+        # point) so the per-window jit sees a handful of shapes instead
+        # of one per distinct frontier advance
+        gq = len(g)
+        pad = (-gq) % 256
+        g_in = np.concatenate([g, np.full((pad,), g[-1], dtype)]) \
+            if pad else g
+        out, mask = grid_resample(jnp.asarray(rows_t), jnp.asarray(rows_v),
+                                  n_row, first_row, jnp.asarray(g_in),
+                                  jnp.asarray(d[:, 0]), mode="hold",
+                                  interpret=interpret,
+                                  use_kernel=use_kernel)
+        out = np.asarray(out)[:, :gq]
+        mask = np.asarray(mask)[:, :gq]
+        ge = g[None, :] + d                  # row-dtype query, as the op
+    span = ge >= np.asarray(t_first, np.float64).astype(dtype)[:, None]
+    mask = mask & span
+    return np.where(mask, out, 0).astype(dtype, copy=False), mask
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: AlignTrack — online per-sensor delay tracking
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AlignCarry:
+    """Sliding uniform-grid ring + the tracked per-row delay EMA."""
+    ring_v: np.ndarray         # (F, W) regridded power on the track grid
+    ring_m: np.ndarray         # (F, W) coverage
+    next_slot: int             # global index of the next unfilled slot
+    last_est_slot: int
+    delay: np.ndarray          # (F,) float64 EMA-tracked lag (seconds)
+    seen: np.ndarray           # (F,) bool — row has >=1 accepted estimate
+
+
+@dataclasses.dataclass
+class DelayTrackPoint:
+    """One per-window re-estimate (kept for tests/diagnostics)."""
+    t_lo: float                # window start (pipeline time)
+    t_hi: float
+    t_center: float
+    raw: np.ndarray            # (n_streams,) this window's lag estimate
+    ema: np.ndarray            # (n_streams,) tracked delay after folding
+    peak: np.ndarray           # (n_streams,) correlation at the peak
+
+
+class AlignTrackStage:
+    """Re-estimate per-stream delays on sliding windows, online.
+
+    Maintains an (F, window) ring buffer on a uniform ``grid_step`` grid
+    (filled incrementally from each closed window through the same hold
+    resample the batch path uses), and every ``hop`` new slots feeds the
+    FULL ring to the ``xcorr_align`` lag bank against the reference —
+    one MXU matmul per re-estimate — then folds the per-window lag into
+    an exponential moving average.  Sensor clock drift
+    (``SensorSpec.drift_ppm``) moves the true lag during the run; the
+    EMA follows it, where a whole-trace batch estimate can only report
+    the mid-run average.
+
+    reference: callable(times_f64) -> (W,) watts — e.g. the known phase
+    schedule ``lambda t: truth.power_at(t + t0_abs)``.  When None, each
+    group's FIRST stream is its own reference (``groups`` required),
+    mirroring the batch default.  Estimates with peak correlation below
+    ``min_corr`` leave the EMA untouched.
+
+    grid_step MUST be derived from the MEASURED sample cadence (e.g.
+    0.5x the median spacing, as batch ``default_grid`` does), not from a
+    nominal round number: a step exactly commensurate with the sensor's
+    production interval beats against the hold-resampled intervals and
+    biases every window's sub-sample peak by up to half a step —
+    measured -0.25 ms at step 0.500 ms on a 1 ms sensor vs -0.03 ms at
+    the measured-cadence 0.506 ms.
+    """
+
+    def __init__(self, n_streams: int, *, grid_step: float,
+                 reference=None, groups=None, window: int = 2048,
+                 hop: int = 512, max_lag: int = 64, ema: float = 0.5,
+                 min_corr: float = 0.2, min_fill: int = None,
+                 tail: int = 256, delay0=None, interpret=None,
+                 use_kernel: bool = True, host: bool = False):
+        assert reference is not None or groups is not None, \
+            "AlignTrack needs a reference schedule or group structure"
+        self.n_streams = n_streams
+        self.step = float(grid_step)
+        self.reference = reference
+        self.groups = groups
+        self.window = int(window)
+        self.hop = int(hop)
+        self.max_lag = int(max_lag)
+        self.ema = float(ema)
+        self.min_corr = float(min_corr)
+        self.min_fill = (self.window // 2 if min_fill is None
+                         else int(min_fill))
+        self.interpret = auto_interpret(interpret)
+        self.use_kernel = use_kernel
+        self.host = host
+        self._tail = _RowTail(tail)
+        self._delay0 = (np.zeros((0,)) if delay0 is None
+                        else np.asarray(delay0, np.float64))
+        self.origin = None
+        self.carry: AlignCarry = None
+        self.history: list = []
+
+    def reset(self):
+        self.origin = None
+        self.carry = None
+        self.history = []
+        self._tail.reset()
+        return self
+
+    @property
+    def delay_s(self) -> np.ndarray:
+        """(F,) currently tracked per-row delay (float64 seconds)."""
+        if self.carry is None:
+            raise RuntimeError("AlignTrack has seen no data yet")
+        return self.carry.delay
+
+    def _init(self, chunk: ClosedWindow):
+        f = chunk.times.shape[0]
+        n = self.n_streams
+        self.origin = float(chunk.times[:n, 0].astype(np.float64).min())
+        delay = np.zeros((f,), np.float64)
+        if len(self._delay0):
+            delay[:len(self._delay0)] = self._delay0
+        self.carry = AlignCarry(
+            ring_v=np.zeros((f, self.window), chunk.values.dtype),
+            ring_m=np.zeros((f, self.window), bool),
+            next_slot=0, last_est_slot=0, delay=delay,
+            seen=np.zeros((f,), bool))
+
+    def update(self, chunk: ClosedWindow) -> ClosedWindow:
+        if self.carry is None:
+            self._init(chunk)
+        c = self.carry
+        n = self.n_streams
+        rows_t, rows_v = self._tail.augmented(chunk)
+        frontier = float(chunk.times[:n, -1].astype(np.float64).min())
+        hi = int(np.floor((frontier - self.origin) / self.step - 0.01))
+        if hi >= c.next_slot:
+            idx = np.arange(c.next_slot, hi + 1)
+            grid64 = self.origin + self.step * idx
+            q_min = np.full((rows_t.shape[0],), grid64[0])
+            self._tail.check_reach(q_min, "AlignTrack")
+            vals, mask = _query_grid(rows_t, rows_v, grid64,
+                                     np.zeros(rows_t.shape[0]),
+                                     chunk.t_first,
+                                     interpret=self.interpret,
+                                     use_kernel=self.use_kernel,
+                                     host=self.host)
+            k = len(idx)
+            if k >= self.window:
+                c.ring_v = vals[:, -self.window:]
+                c.ring_m = mask[:, -self.window:]
+            else:
+                c.ring_v = np.concatenate([c.ring_v[:, k:], vals], axis=1)
+                c.ring_m = np.concatenate([c.ring_m[:, k:], mask], axis=1)
+            c.next_slot = hi + 1
+        self._tail.advance(chunk)
+        if (c.next_slot - c.last_est_slot >= self.hop
+                and c.next_slot >= self.min_fill):
+            self._estimate()
+            c.last_est_slot = c.next_slot
+        return chunk
+
+    def _estimate(self):
+        from repro.align.delay import (estimate_delays,
+                                       estimate_delays_host,
+                                       stream_reference)
+        c = self.carry
+        n = self.n_streams
+        w_idx = np.arange(c.next_slot - self.window, c.next_slot)
+        times64 = self.origin + self.step * w_idx
+        f = c.ring_v.shape[0]
+        raw = np.zeros((f,))
+        peak = np.zeros((f,))
+
+        uk = True if self.use_kernel is None else self.use_kernel
+
+        def run(vals, mask, ref):
+            if self.host:
+                return estimate_delays_host(vals.astype(np.float64),
+                                            mask, ref, step=self.step,
+                                            max_lag=self.max_lag)
+            return estimate_delays(vals, mask.astype(vals.dtype), ref,
+                                   step=self.step, max_lag=self.max_lag,
+                                   interpret=self.interpret,
+                                   use_kernel=uk)
+
+        if self.reference is not None:
+            ref = np.asarray(self.reference(times64), np.float64)
+            est = run(c.ring_v, c.ring_m, ref)
+            raw, peak = est.delay_s, est.peak_corr
+        else:
+            lo = 0
+            for g in self.groups:
+                hi = lo + g
+                ref = stream_reference(c.ring_v[lo], c.ring_m[lo])
+                est = run(c.ring_v[lo:hi], c.ring_m[lo:hi], ref)
+                raw[lo:hi], peak[lo:hi] = est.delay_s, est.peak_corr
+                lo = hi
+        good = peak >= self.min_corr
+        good[n:] = False                      # padding rows never track
+        a = np.where(c.seen, self.ema, 1.0)   # first estimate: direct
+        c.delay = np.where(good, (1 - a) * c.delay + a * raw, c.delay)
+        c.seen = c.seen | good
+        self.history.append(DelayTrackPoint(
+            t_lo=float(times64[0]), t_hi=float(times64[-1]),
+            t_center=float(0.5 * (times64[0] + times64[-1])),
+            raw=raw[:n].copy(), ema=c.delay[:n].copy(),
+            peak=peak[:n].copy()))
+
+
+# ---------------------------------------------------------------------------
+# Stage 4: Regrid/Fuse — streaming resample + fusion statistics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FuseCarry:
+    """Emit frontier + the additive inverse-variance sufficient stats.
+
+    ``n_k``/``ssr`` accumulate exactly the quantities batch
+    ``fuse_gridded`` reduces over the whole grid (per-stream valid
+    counts and squared residuals against the per-slot unweighted
+    cross-sensor mean), so the END-OF-RUN weights equal the batch
+    weights without holding any grid column beyond the current window.
+    """
+    next_slot: int
+    n_k: np.ndarray            # (n_streams,) float64
+    ssr: np.ndarray            # (n_streams,) float64
+
+
+class RegridFuseStage:
+    """Power windows -> delay-corrected shared-grid slots + fusion stats.
+
+    The output grid is fixed (``origin + step * slot``); each update
+    emits every slot whose per-row query ``slot_time + delay[row]`` is
+    already closed by ALL active rows (the emit frontier — trailing the
+    slowest stream keeps hold lookups final).  Queries resolve against
+    [tail | window] through ``grid_resample``; delays come live from an
+    ``AlignTrackStage`` or stay fixed.  ``flush`` emits the remaining
+    slots once the run ends (rows that end early mask off exactly as in
+    the batch regrid).
+    """
+
+    def __init__(self, group_sizes, *, grid_origin: float,
+                 grid_step: float, delays=None, align=None,
+                 tail: int = 256, var_floor: float = 0.25,
+                 interpret=None, use_kernel=None, host: bool = False):
+        self.group_sizes = list(group_sizes)
+        self.n_streams = int(sum(self.group_sizes))
+        self.origin = float(grid_origin)
+        self.step = float(grid_step)
+        self.align = align
+        self._fixed = (np.zeros((self.n_streams,)) if delays is None
+                       else np.asarray(delays, np.float64).reshape(-1))
+        self.var_floor = float(var_floor)
+        self.interpret = auto_interpret(interpret)
+        self.use_kernel = use_kernel
+        self.host = host
+        self._tail = _RowTail(tail)
+        self.carry = FuseCarry(next_slot=0,
+                               n_k=np.zeros((self.n_streams,)),
+                               ssr=np.zeros((self.n_streams,)))
+        self._t_first = None
+        self._nan = None
+
+    def reset(self):
+        self._tail.reset()
+        self.carry = FuseCarry(next_slot=0,
+                               n_k=np.zeros((self.n_streams,)),
+                               ssr=np.zeros((self.n_streams,)))
+        self._t_first = None
+        return self
+
+    def _delays(self, f: int) -> np.ndarray:
+        d = np.zeros((f,))
+        if self.align is not None:
+            d[:] = self.align.delay_s[:f]
+        else:
+            d[:self.n_streams] = self._fixed
+        return d
+
+    def _emit(self, rows_t, rows_v, t_first, delays, lo: int, hi: int):
+        idx = np.arange(lo, hi + 1)
+        grid64 = self.origin + self.step * idx
+        self._tail.check_reach(grid64[0] + delays, "Regrid/Fuse")
+        vals, mask = _query_grid(rows_t, rows_v, grid64, delays, t_first,
+                                 interpret=self.interpret,
+                                 use_kernel=self.use_kernel,
+                                 host=self.host)
+        n = self.n_streams
+        vals, mask = vals[:n], mask[:n]
+        # fusion statistics: per-slot cross-sensor mean within each group
+        flo = 0
+        for k in self.group_sizes:
+            fhi = flo + k
+            v = vals[flo:fhi].astype(np.float64)
+            m = mask[flo:fhi]
+            cnt = m.sum(axis=0)
+            m0 = (v * m).sum(axis=0) / np.maximum(cnt, 1.0)
+            resid = (v - m0[None, :]) * m
+            self.carry.n_k[flo:fhi] += m.sum(axis=1)
+            self.carry.ssr[flo:fhi] += (resid * resid).sum(axis=1)
+            flo = fhi
+        self.carry.next_slot = hi + 1
+        return GriddedWindow(lo=lo, grid=grid64, values=vals, mask=mask)
+
+    def update(self, chunk: ClosedWindow):
+        n = self.n_streams
+        self._t_first = chunk.t_first
+        rows_t, rows_v = self._tail.augmented(chunk)
+        delays = self._delays(rows_t.shape[0])
+        frontier = float((chunk.times[:n, -1].astype(np.float64)
+                          - delays[:n]).min())
+        # a safety margin of 1% of a step keeps float32-rounded queries
+        # strictly inside every row's closed span (re-emitted exactly at
+        # flush time where the span bound is final)
+        hi = int(np.floor((frontier - self.origin) / self.step - 0.01))
+        out = None
+        if hi >= self.carry.next_slot:
+            out = self._emit(rows_t, rows_v, chunk.t_first, delays,
+                             self.carry.next_slot, hi)
+        self._tail.advance(chunk)
+        return out
+
+    def flush(self, t_end: float = None):
+        """Emit the remaining slots with the rows' FINAL spans.
+
+        t_end: last grid time to cover (pipeline seconds) — pass the
+        batch grid's endpoint for replay parity; default covers every
+        row's last closed sample.
+        """
+        if self._tail.carry is None:
+            return None
+        tc = self._tail.carry
+        f = tc.t.shape[0]
+        n = self.n_streams
+        delays = self._delays(f)
+        if t_end is None:
+            t_end = float((tc.t[:n, -1].astype(np.float64)
+                           - delays[:n]).max())
+        hi = int(np.floor((t_end - self.origin) / self.step + 1e-9))
+        if hi < self.carry.next_slot:
+            return None
+        sent_t = np.full((f, 1), -np.inf, tc.t.dtype)
+        sent_v = np.zeros((f, 1), tc.v.dtype)
+        rows_t = np.concatenate([sent_t, tc.t], axis=1)
+        rows_v = np.concatenate([sent_v, tc.v], axis=1)
+        return self._emit(rows_t, rows_v, self._t_first, delays,
+                          self.carry.next_slot, hi)
+
+    def weights(self) -> np.ndarray:
+        """(n_streams,) end-of-run inverse-variance weights — the batch
+        ``fuse_gridded`` weights, reduced incrementally."""
+        c = self.carry
+        var = c.ssr / np.maximum(c.n_k, 1.0)
+        return np.where(c.n_k > 1, 1.0 / (var + self.var_floor), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Stage 5: PhaseAttribute
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FusedAttrCarry:
+    """Per-device carry for fused streaming attribution.
+
+    ``integrals[d][pattern]`` is a (P, K_d) block: for every grid
+    interval whose closing slot had exactly ``pattern`` coverage, the
+    per-stream sum of value x phase-overlap.  The fused per-phase
+    energy is then  sum_pattern (I @ w) / sum_{k in pattern} w_k  once
+    the end-of-run weights are known — the only quantity the batch path
+    computes that a causal stream cannot: per-stream variance needs the
+    whole run, so the nonlinear (weights) step is deferred to
+    ``totals()`` while everything per-sample stays O(window).
+    """
+    t_prev: np.ndarray         # (D,) float64 last valid slot time
+    integrals: list            # [ {pattern:int -> (P, K_d) float64} ]
+
+
+class FusedPhaseAttributeStage:
+    """Gridded windows -> per-(device, phase) fused energies.
+
+    Integration follows the batch convention exactly: the fused series
+    is sample-and-hold on the output grid, invalid slots are bridged by
+    carrying the previous valid edge forward (their interval folds into
+    the next valid slot), and the first valid slot seeds zero-width.
+    """
+
+    def __init__(self, phases, group_sizes, fuse: RegridFuseStage):
+        ph = np.asarray(phases, np.float64).reshape(-1, 2)
+        self.phases = ph
+        self.n_phases = len(ph)
+        self.group_sizes = list(group_sizes)
+        self.fuse = fuse
+        self.carry = self._fresh()
+
+    def _fresh(self):
+        d = len(self.group_sizes)
+        return FusedAttrCarry(t_prev=np.full((d,), np.nan),
+                              integrals=[{} for _ in range(d)])
+
+    def reset(self):
+        self.carry = self._fresh()
+        return self
+
+    def update(self, gw: GriddedWindow):
+        a = self.phases[:, 0][:, None]
+        b = self.phases[:, 1][:, None]
+        lo = 0
+        for d, k in enumerate(self.group_sizes):
+            hi = lo + k
+            m = gw.mask[lo:hi]
+            anyv = m.any(axis=0)
+            if anyv.any():
+                sel = np.nonzero(anyv)[0]
+                tv = gw.grid[sel]
+                tp = self.carry.t_prev[d]
+                if not np.isfinite(tp):
+                    tp = tv[0]               # zero-width seed
+                t_lo = np.concatenate([[tp], tv[:-1]])
+                ov = np.clip(np.minimum(tv[None, :], b)
+                             - np.maximum(t_lo[None, :], a), 0.0, None)
+                mm = m[:, sel]
+                vv = gw.values[lo:hi][:, sel].astype(np.float64) * mm
+                bits = (1 << np.arange(k, dtype=np.int64))[:, None]
+                pat = (mm * bits).sum(axis=0)
+                for p in np.unique(pat):
+                    ps = pat == p
+                    acc = self.carry.integrals[d].setdefault(
+                        int(p), np.zeros((self.n_phases, k)))
+                    acc += ov[:, ps] @ vv[:, ps].T
+                self.carry.t_prev[d] = tv[-1]
+            lo = hi
+        return None
+
+    def totals(self) -> np.ndarray:
+        """(n_devices, n_phases) fused joules, finalized with the
+        end-of-run inverse-variance weights."""
+        w_flat = self.fuse.weights()
+        out = np.zeros((len(self.group_sizes), self.n_phases))
+        lo = 0
+        for d, k in enumerate(self.group_sizes):
+            w = w_flat[lo:lo + k]
+            for p, acc in self.carry.integrals[d].items():
+                member = (p >> np.arange(k)) & 1
+                w_tot = float((w * member).sum())
+                if w_tot > 0:
+                    out[d] += acc @ w / w_tot
+            lo += k
+        return out
+
+    def weights(self) -> list:
+        """Per-device normalized stream weights (diagnostics)."""
+        w_flat = self.fuse.weights()
+        out = []
+        lo = 0
+        for k in self.group_sizes:
+            w = w_flat[lo:lo + k]
+            out.append(w / max(w.sum(), 1e-30))
+            lo += k
+        return out
+
+
+class PhaseIntegrateStage:
+    """Power windows -> (F, P) energies via the phase_integrate kernel
+    (the StreamingPhaseAccumulator core)."""
+
+    def __init__(self, phases, n_streams: int, *, dtype=np.float32,
+                 interpret=None, use_kernel: bool = True):
+        import jax.numpy as jnp
+        self.phases = jnp.asarray(pad_phases(phases, dtype))
+        self.n_phases = len(np.asarray(phases,
+                                       np.float64).reshape(-1, 2))
+        self.interpret = auto_interpret(interpret)
+        self.use_kernel = use_kernel
+        self._acc = jnp.zeros((n_streams, len(self.phases)), dtype)
+
+    def reset(self):
+        import jax.numpy as jnp
+        self._acc = jnp.zeros_like(self._acc)
+        return self
+
+    def update(self, chunk: ClosedWindow):
+        self._acc = _integrate_window(chunk.times, chunk.values,
+                                      self.phases, self._acc,
+                                      interpret=self.interpret,
+                                      use_kernel=self.use_kernel)
+        return None
+
+    def totals(self) -> np.ndarray:
+        return np.asarray(self._acc)[:, :self.n_phases]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def _integrate_window(t_aug, w_aug, phases, acc, *, interpret=False,
+                      use_kernel=True):
+    from repro.kernels.phase_integrate.kernel import phase_integrate_kernel
+    from repro.kernels.phase_integrate.ref import phase_energies_ref
+    if use_kernel:
+        de = phase_integrate_kernel(t_aug, w_aug, phases,
+                                    interpret=interpret)
+    else:
+        de = phase_energies_ref(t_aug, w_aug, phases)
+    return acc + de
+
+
+class CounterAttributeStage:
+    """Counter windows -> (F, P) energies through the fused
+    ``fleet_attribute`` kernel (dE/dt + integration in one pass, the
+    FleetStream core), optionally row-sharded over a fleet mesh."""
+
+    def __init__(self, phases, n_streams: int, wrap_period=None, *,
+                 dtype=np.float32, interpret=None,
+                 use_kernel: bool = True, mesh="auto"):
+        import jax.numpy as jnp
+        from repro.distributed.sharding import (fleet_mesh,
+                                                fleet_rows_divisible)
+        self.phases = jnp.asarray(pad_phases(phases, dtype))
+        self.n_phases = len(np.asarray(phases,
+                                       np.float64).reshape(-1, 2))
+        self.interpret = auto_interpret(interpret)
+        self.use_kernel = use_kernel
+        if mesh == "auto":
+            mesh = fleet_mesh()
+        if mesh is not None and not fleet_rows_divisible(mesh, n_streams):
+            mesh = None
+        self.mesh = mesh
+        wp = (np.zeros((n_streams,), dtype) if wrap_period is None
+              else np.asarray(wrap_period, dtype))
+        self._period = jnp.asarray(wp)
+        self._acc = jnp.zeros((n_streams, len(self.phases)), dtype)
+
+    def reset(self):
+        import jax.numpy as jnp
+        self._acc = jnp.zeros_like(self._acc)
+        return self
+
+    def update(self, chunk: ClosedWindow):
+        import jax.numpy as jnp
+        t = jnp.asarray(chunk.times)
+        e = jnp.asarray(chunk.values)
+        if self.mesh is not None:
+            step = _sharded_attribute_step(self.mesh, self.interpret,
+                                           self.use_kernel)
+            self._acc = step(t, e, self._period, self.phases, self._acc)
+        else:
+            self._acc = _attribute_window(t, e, self._period, self.phases,
+                                          self._acc,
+                                          interpret=self.interpret,
+                                          use_kernel=self.use_kernel)
+        return None
+
+    def totals(self) -> np.ndarray:
+        return np.asarray(self._acc)[:, :self.n_phases]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def _attribute_window(t_aug, e_aug, period, phases, acc, *,
+                      interpret=False, use_kernel=True):
+    """One streaming step through the fused dE/dt + phase-energy kernel.
+
+    Counter wrap is fixed per interval inside the kernel (no cumulative
+    unwrap state — dE telescopes across chunks through the carry edge).
+    """
+    from repro.kernels.fleet_attribute.kernel import fleet_attribute_kernel
+    from repro.kernels.fleet_attribute.ref import fleet_attribute_ref
+    wrap_row = period[:, None]
+    if use_kernel:
+        energy = fleet_attribute_kernel(t_aug, e_aug, wrap_row, phases,
+                                        interpret=interpret)
+    else:
+        energy = fleet_attribute_ref(t_aug, e_aug, wrap_row, phases)
+    return acc + energy
+
+
+_SHARDED_STEP_CACHE: dict = {}
+
+
+def _sharded_attribute_step(mesh, interpret: bool, use_kernel: bool):
+    """The fused attribution step with the kernel row-sharded over
+    ``mesh`` — the kernel is row-independent (each stream's dE/dt and
+    phase overlaps touch only its own row; the phase table is
+    replicated), so the fleet axis partitions with zero collectives."""
+    from repro.distributed.sharding import fleet_shard_map
+    key = (mesh, interpret, use_kernel)
+    fn = _SHARDED_STEP_CACHE.get(key)
+    if fn is not None:
+        return fn
+    from repro.kernels.fleet_attribute.kernel import fleet_attribute_kernel
+    from repro.kernels.fleet_attribute.ref import fleet_attribute_ref
+
+    def block(t_aug, e_aug, wrap_row, phases):
+        if use_kernel:
+            return fleet_attribute_kernel(t_aug, e_aug, wrap_row, phases,
+                                          interpret=interpret)
+        return fleet_attribute_ref(t_aug, e_aug, wrap_row, phases)
+
+    inner = fleet_shard_map(block, mesh, n_in=4, n_out=1,
+                            replicated_in=(3,))
+
+    @jax.jit
+    def step(t_aug, e_aug, period, phases, acc):
+        energy = inner(t_aug, e_aug, period[:, None], phases)
+        return acc + energy
+
+    _SHARDED_STEP_CACHE[key] = step
+    return step
+
+
+# ---------------------------------------------------------------------------
+# The pipeline driver
+# ---------------------------------------------------------------------------
+
+class StreamPipeline:
+    """Chain stages; push each (fleet, chunk) window through all of them.
+
+    ``update`` feeds the first stage raw arrays and forwards each
+    stage's output window to the next (a stage returning None ends the
+    window's journey — e.g. the regrid frontier did not advance).
+    ``finalize`` flushes every stage in order, routing whatever it still
+    held through the remainder of the chain.
+    """
+
+    def __init__(self, *stages):
+        self.stages = list(stages)
+
+    def update(self, times, values, valid=None):
+        out = self.stages[0].update(times, values, valid)
+        for st in self.stages[1:]:
+            if out is None:
+                break
+            out = st.update(out)
+        return self
+
+    def finalize(self, t_end: float = None):
+        for i, st in enumerate(self.stages):
+            flush = getattr(st, "flush", None)
+            if flush is None:
+                continue
+            out = flush(t_end)
+            for st2 in self.stages[i + 1:]:
+                if out is None:
+                    break
+                out = st2.update(out)
+        return self
+
+    def reset(self):
+        for st in self.stages:
+            st.reset()
+        return self
+
+
+# ---------------------------------------------------------------------------
+# High level: the streaming fused pipeline and its trace-level entry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamRows:
+    """Raw packed rows for streaming replay/ingest (mixed sensor kinds).
+
+    Unlike ``align.regrid.SeriesRows`` the values are NOT reconstructed:
+    counter rows keep their (float64-unwrapped, rebased) cumulative
+    joules so dE/dt happens inside the pipeline's Reconstruct stage.
+    The float32 rounding of times matches ``series_rows_from_traces``
+    bit-for-bit (same two-step rebase for counter rows), so a streamed
+    replay presents the regrid stage with EXACTLY the samples the batch
+    path sees.
+    """
+    times: np.ndarray          # (F, S) seconds since t0
+    values: np.ndarray         # (F, S) cumulative J or W
+    kind_row: np.ndarray       # (F,) True = cumulative counter
+    n_samples: np.ndarray      # (F,)
+    names: list
+    n_streams: int
+    t0: float
+
+    @property
+    def shape(self):
+        return self.times.shape
+
+
+def pack_stream_rows(traces, *, corrections=None,
+                     use_t_measured: bool = True, t0=None,
+                     dtype=np.float32) -> StreamRows:
+    """SensorTraces (mixed cumulative + power) -> raw streaming rows."""
+    from repro.core.calibration import apply_corrections
+    traces = [apply_corrections(tr, corrections) for tr in traces]
+    assert traces, "pack_stream_rows needs at least one trace"
+    if t0 is None:
+        t0 = min(float((tr.t_measured if use_t_measured
+                        else tr.t_read)[0]) for tr in traces)
+    cum = [i for i, tr in enumerate(traces) if tr.spec.is_cumulative]
+    pwr = [i for i, tr in enumerate(traces) if not tr.spec.is_cumulative]
+    f = _round_up(len(traces), ROW_ALIGN)
+    s_cum = s_pwr = 2
+    packed = None
+    if cum:
+        packed = pack_traces([traces[i] for i in cum],
+                             use_t_measured=use_t_measured, dtype=dtype)
+        s_cum = packed.shape[1]
+    if pwr:
+        s_pwr = max(max(len(traces[i]) for i in pwr), 2)
+    s = max(s_cum, s_pwr)
+    times = np.zeros((f, s), dtype)
+    values = np.zeros((f, s), dtype)
+    kind = np.zeros((f,), bool)
+    n = np.full((f,), 2, np.int32)
+    if cum:
+        sel = np.asarray(cum)
+        n_cum = len(cum)
+        # two-step rebase (pack origin, then the shared origin) exactly
+        # as series_rows_from_traces does — identical float32 times
+        shift = dtype(packed.t0 - t0)
+        times[sel, :s_cum] = packed.times[:n_cum] + shift
+        values[sel, :s_cum] = packed.energy[:n_cum]
+        if s > s_cum:                        # replicate-last tails
+            times[sel, s_cum:] = times[sel, s_cum - 1][:, None]
+            values[sel, s_cum:] = values[sel, s_cum - 1][:, None]
+        kind[sel] = True
+        n[sel] = packed.n_samples[:n_cum]
+    for i in pwr:
+        tr = traces[i]
+        t = (tr.t_measured if use_t_measured else tr.t_read)
+        kk = len(tr)
+        times[i, :kk] = np.maximum.accumulate(t - t0)
+        values[i, :kk] = tr.value
+        times[i, kk:] = times[i, kk - 1]
+        values[i, kk:] = values[i, kk - 1]
+        n[i] = kk
+    for i in range(len(traces), f):          # padding rows: zero-width
+        times[i] = 0.0
+        values[i] = 0.0
+    return StreamRows(times, values, kind, n,
+                      [tr.name for tr in traces], len(traces), t0)
+
+
+def default_tail(rows: StreamRows, chunk: int, *, delays=None,
+                 max_lag: int = 64, grid_step: float = 1e-3) -> int:
+    """Tail columns needed so delayed queries never outrun the carry.
+
+    The emit frontier trails the most-delayed stream, so every fast
+    row's tail must span the delay SPREAD plus one window of slack
+    (the track range bounds the spread when delays are live).
+    """
+    min_step = _min_cadence(rows)
+    if delays is not None:
+        d = np.asarray(delays, np.float64)
+        spread = float(d.max() - min(d.min(), 0.0))
+    else:
+        spread = max_lag * grid_step
+    tail_s = spread + chunk * min_step
+    return max(256, int(np.ceil(tail_s / min_step)) + 64)
+
+
+def _min_cadence(rows: StreamRows) -> float:
+    """Fastest per-row median sample spacing (seconds; 1e-3 fallback)."""
+    steps = []
+    for i in range(rows.n_streams):
+        dt = np.diff(rows.times[i, :rows.n_samples[i]].astype(np.float64))
+        dt = dt[dt > 0]
+        if len(dt):
+            steps.append(float(np.median(dt)))
+    return min(steps) if steps else 1e-3
+
+
+def stream_row_windows(rows: StreamRows, chunk: int = 1024):
+    """Replay packed rows as TIME-aligned (fleet, C) windows.
+
+    Heterogeneous cadences make equal COLUMN counts span wildly
+    different time ranges per row (a 100 ms PM counter covers 100x the
+    span of a 1 ms on-chip counter), which would run slow rows
+    arbitrarily far ahead of the emit frontier.  Real ingest loops
+    (``AsyncFleetIngest``) poll by wall clock, so the replay does the
+    same: each window covers one time span for every row, sized so the
+    fastest row advances ~``chunk`` samples, and rows short of the
+    window width pad by replicating their last sample (zero-width
+    intervals — search-invisible, exactly zero energy).  Yields
+    (times, values) blocks for ``StreamingFusedPipeline.update``.
+    """
+    f, s = rows.shape
+    n = rows.n_streams
+    dt_win = max(chunk, 2) * _min_cadence(rows)
+    t_lo = float(rows.times[:n, 0].astype(np.float64).min())
+    t_hi = float(rows.times[:n, -1].astype(np.float64).max())
+    n_win = max(int(np.ceil((t_hi - t_lo) / dt_win)), 1)
+    edges = (t_lo + dt_win * np.arange(1, n_win)).astype(rows.times.dtype)
+    idx = np.zeros((f, n_win + 1), np.int64)
+    for i in range(n):                       # padding rows stay empty
+        idx[i, 1:-1] = np.searchsorted(rows.times[i], edges,
+                                       side="right")
+        idx[i, -1] = s
+    for w in range(n_win):
+        lo, hi = idx[:, w], idx[:, w + 1]
+        cnt = hi - lo
+        width = int(cnt.max())
+        width = max(_round_up(width, 64), 64)
+        cols = lo[:, None] + np.arange(width)[None, :]
+        # rows short of the window replicate their last in-window
+        # sample; rows with no new samples replicate their previous one
+        cols = np.minimum(cols, np.maximum(hi - 1, np.maximum(lo - 1,
+                                                              0))[:, None])
+        yield (np.take_along_axis(rows.times, cols, axis=1),
+               np.take_along_axis(rows.values, cols, axis=1))
+
+
+class StreamingFusedPipeline:
+    """Ingest -> Reconstruct -> AlignTrack -> Regrid/Fuse -> PhaseAttr.
+
+    The streaming-first counterpart of ``align.align_and_fuse`` +
+    ``attribute_energy_fused``: feed raw (fleet, chunk) windows of mixed
+    counter/power sensor reads; per-sensor delay is tracked online on
+    sliding windows (or fixed via ``delays``), every stream is regridded
+    onto one shared grid behind an emit frontier, and fused per-phase
+    energies finalize with the end-of-run inverse-variance weights.
+    Peak memory is O(fleet x (chunk + tail) + fleet x window) however
+    long the run.
+
+    group_sizes: sensors per device, in row order (rows are the
+    flattened groups; trailing padding rows up to a ROW_ALIGN multiple
+    are ignored).  phases: [(a, b)] in pipeline time (seconds since the
+    caller's origin).  reference: callable(times)->watts in pipeline
+    time for delay tracking; ``track=False`` freezes ``delays``.
+    """
+
+    def __init__(self, group_sizes, phases, *, grid_origin: float,
+                 grid_step: float, kind_row=None, wrap_period=None,
+                 delays=None, reference=None, track: bool = None,
+                 window: int = 2048, hop: int = 512, max_lag: int = 64,
+                 ema: float = 0.5, min_corr: float = 0.2, tail: int = 256,
+                 var_floor: float = 0.25, dtype=np.float32,
+                 interpret=None, use_kernel=None, host: bool = False):
+        self.group_sizes = list(group_sizes)
+        n = int(sum(self.group_sizes))
+        self.n_streams = n
+        f = _round_up(n, ROW_ALIGN)
+        self.n_rows = f
+        if kind_row is None:
+            kind_row = np.zeros((f,), bool)
+        kr = np.zeros((f,), bool)
+        kr[:len(np.asarray(kind_row))] = np.asarray(kind_row, bool)
+        wp = np.zeros((f,), np.float64)
+        if wrap_period is not None:       # pad to the row tile, like kr
+            wp_in = np.asarray(wrap_period, np.float64).reshape(-1)
+            wp[:len(wp_in)] = wp_in
+        interpret = auto_interpret(interpret)
+        uk_bool = True if use_kernel is None else use_kernel
+        if track is None:
+            track = delays is None
+        self.ingest = IngestStage(n, mode="sanitize", kind_row=kr)
+        self.reconstruct = ReconstructStage(
+            kr, wp, interpret=interpret, use_kernel=uk_bool,
+            host=host)
+        self.align = None
+        if track:
+            self.align = AlignTrackStage(
+                n, grid_step=grid_step, reference=reference,
+                groups=None if reference is not None else self.group_sizes,
+                window=window, hop=hop, max_lag=max_lag, ema=ema,
+                min_corr=min_corr, tail=tail, delay0=delays,
+                interpret=interpret, use_kernel=use_kernel, host=host)
+        self.fuse = RegridFuseStage(
+            self.group_sizes, grid_origin=grid_origin,
+            grid_step=grid_step, delays=delays, align=self.align,
+            tail=tail, var_floor=var_floor, interpret=interpret,
+            use_kernel=use_kernel, host=host)
+        self.attr = FusedPhaseAttributeStage(phases, self.group_sizes,
+                                             self.fuse)
+        stages = [self.ingest, self.reconstruct]
+        if self.align is not None:
+            stages.append(self.align)
+        stages += [self.fuse, self.attr]
+        self.pipeline = StreamPipeline(*stages)
+        self._dtype = dtype
+
+    def update(self, times, values, valid=None):
+        t = np.asarray(times, self._dtype)
+        v = np.asarray(values, self._dtype)
+        if t.shape[0] < self.n_rows:         # pad rows to the row tile
+            pad = self.n_rows - t.shape[0]
+            t = np.concatenate([t, np.repeat(t[-1:], pad, axis=0)])
+            v = np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+            if valid is not None:
+                valid = np.concatenate(
+                    [np.asarray(valid, bool),
+                     np.ones((pad, t.shape[1]), bool)])
+        self.pipeline.update(t, v, valid)
+        return self
+
+    def finalize(self, t_end: float = None):
+        self.pipeline.finalize(t_end)
+        return self
+
+    def totals(self) -> np.ndarray:
+        """(n_devices, n_phases) fused joules accumulated so far."""
+        return self.attr.totals()
+
+    def weights(self) -> list:
+        return self.attr.weights()
+
+    def delays(self) -> np.ndarray:
+        """(n_streams,) per-stream delay in use (tracked or fixed)."""
+        if self.align is not None and self.align.carry is not None:
+            return self.align.delay_s[:self.n_streams].copy()
+        d = np.zeros((self.n_rows,))
+        d[:self.n_streams] = self.fuse._fixed
+        return d[:self.n_streams]
+
+    @property
+    def delay_history(self) -> list:
+        return [] if self.align is None else self.align.history
+
+    def reset(self):
+        self.pipeline.reset()
+        return self
+
+
+def attribute_energy_fused_streaming(trace_groups, phases, *,
+                                     chunk: int = 1024, reference=None,
+                                     corrections=None, grid=None,
+                                     grid_step=None, delays=None,
+                                     track: bool = None, window: int = 2048,
+                                     hop: int = 512, max_lag: int = 64,
+                                     ema: float = 0.5, tail: int = None,
+                                     var_floor: float = 0.25,
+                                     use_t_measured: bool = True,
+                                     dtype=np.float32, interpret=None,
+                                     use_kernel=None,
+                                     host: bool = False) -> list:
+    """Streaming-first counterpart of ``align.attribute_energy_fused``.
+
+    trace_groups: [[SensorTrace, ...], ...] — all sensors observing one
+    device per group.  The traces are packed once (raw, no
+    reconstruction) and REPLAYED through the streaming pipeline in
+    ``chunk``-column windows: dE/dt, online delay tracking, regrid and
+    fusion statistics all run per window, so device memory never holds
+    a full trace.  phases: [(name, a, b)] absolute seconds.  ``grid``
+    (absolute) pins the output grid for batch-replay parity; otherwise
+    a default grid at half the fastest cadence is derived.  Returns one
+    ``[PhaseEnergy]`` per group.
+    """
+    from repro.core.attribution import PhaseEnergy
+    groups = [list(g) for g in trace_groups]
+    flat = [tr for g in groups for tr in g]
+    rows = pack_stream_rows(flat, corrections=corrections,
+                            use_t_measured=use_t_measured, dtype=dtype)
+    if grid is not None:
+        grid = np.asarray(grid, np.float64)
+        grid_step = float(np.median(np.diff(grid)))
+        origin = float(grid[0]) - rows.t0
+        t_end = float(grid[-1]) - rows.t0
+    else:
+        if grid_step is None:
+            grid_step = 0.5 * _min_cadence(rows)
+        origin = float(rows.times[:rows.n_streams, 0]
+                       .astype(np.float64).min())
+        t_end = None
+    if tail is None:
+        tail = default_tail(rows, chunk, delays=delays,
+                            max_lag=max_lag, grid_step=grid_step)
+    ref = None
+    if reference is not None:
+        from repro.core.power_model import PiecewisePower
+        if isinstance(reference, PiecewisePower):
+            t0 = rows.t0
+            ref = lambda t, _r=reference: _r.power_at(t + t0)  # noqa: E731
+        else:
+            ref = reference
+    if not phases:
+        return [[] for _ in groups]
+    windows = [(a - rows.t0, b - rows.t0) for _, a, b in phases]
+    pipe = StreamingFusedPipeline(
+        [len(g) for g in groups], windows, grid_origin=origin,
+        grid_step=grid_step, kind_row=rows.kind_row, delays=delays,
+        reference=ref, track=track, window=window, hop=hop,
+        max_lag=max_lag, ema=ema, tail=tail, var_floor=var_floor,
+        dtype=dtype, interpret=interpret, use_kernel=use_kernel,
+        host=host)
+    for t_blk, v_blk in stream_row_windows(rows, chunk):
+        pipe.update(t_blk, v_blk)
+    pipe.finalize(t_end)
+    totals = pipe.totals()
+    out = []
+    for di in range(len(groups)):
+        row = []
+        for (name, a, b), e in zip(phases, totals[di]):
+            dur = max(b - a, 1e-12)
+            row.append(PhaseEnergy(name, a, b, float(e), float(e / dur)))
+        out.append(row)
+    return out

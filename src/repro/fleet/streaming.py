@@ -1,256 +1,74 @@
 """Streaming, chunked per-phase energy accumulation (online attribution).
 
-Arbitrarily long runs never materialize full traces: each ``update`` sees
-one fixed-size (fleet, chunk) window plus a one-column carry, pushes it
-through the Pallas kernels, and folds the result into an (fleet, phases)
-accumulator.  Peak device memory is O(fleet × chunk + fleet × phases)
-regardless of run length — the memory bound the serving/HPL paths rely on.
-
-Two layers:
+Thin pre-built pipelines over the composable stage layer
+(``fleet/pipeline.py``) — the two entry points every pre-pipeline call
+site keeps using:
 
   StreamingPhaseAccumulator — already-reconstructed power chunks
-                              -> per-phase energy (phase_integrate kernel)
-  FleetStream               — raw cumulative-counter chunks: carry-aware
-                              unwrap + ΔE/Δt (power_reconstruct kernel)
-                              feeding the accumulator.
+                              -> per-phase energy:
+                              Ingest(maskfill) -> PhaseIntegrate
+                              (phase_integrate kernel)
+  FleetStream               — raw cumulative-counter chunks:
+                              Ingest(sanitize) -> CounterAttribute
+                              (fused fleet_attribute kernel: carry-aware
+                              unwrap + dE/dt + integration in one pass,
+                              optionally row-sharded over a fleet mesh)
+
+Arbitrarily long runs never materialize full traces: each ``update``
+sees one fixed-size (fleet, chunk) window plus a one-column carry; peak
+device memory is O(fleet x chunk + fleet x phases) regardless of run
+length — the memory bound the serving/HPL paths rely on.
 
 Dedup falls out of the sample-and-hold algebra instead of compaction: a
 repeated publication republishes the previous (t, E) pair, giving a
 zero-width interval that holds 0 W over no time — exactly zero energy.
-Reordered timestamps (rare tool-jitter artifact) would lose their ΔE to
-the clamped overlap, so chunks are sanitized at ingest: a cheap host-side
-monotonicity check, and only when it trips, a running-max carry-forward
-that bridges dropped samples (ΔE telescopes through the carried value —
-total energy conserved; phase boundaries shift by at most one sample).
+Reordered timestamps (rare tool-jitter artifact) would lose their dE to
+the clamped overlap, so the Ingest stage sanitizes chunks on the host
+(see ``pipeline.sanitize_chunk``).  For the full streaming-fused chain
+(online delay tracking + regrid + inverse-variance fusion) see
+``pipeline.StreamingFusedPipeline``.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.fleet.reconstruct import auto_interpret
-from repro.kernels.fleet_attribute.kernel import fleet_attribute_kernel
-from repro.kernels.fleet_attribute.ref import fleet_attribute_ref
-from repro.kernels.phase_integrate.kernel import phase_integrate_kernel
-from repro.kernels.phase_integrate.ref import phase_energies_ref
+from repro.fleet.pipeline import (PHASE_ALIGN,  # noqa: F401 (re-export)
+                                  CounterAttributeStage, IngestStage,
+                                  PhaseIntegrateStage, StreamPipeline,
+                                  pad_phases, sanitize_chunk)
 
-# phase_integrate tiles phases in blocks of 32; pad zero-width phases.
-PHASE_ALIGN = 32
-
-
-def pad_phases(phases, dtype=np.float32):
-    """(P, 2) [a, b) windows -> kernel-aligned array (zero-width padding)."""
-    ph = np.asarray(phases, dtype).reshape(-1, 2)
-    p = len(ph)
-    if p == 0:
-        raise ValueError("streaming attribution needs at least one phase "
-                         "window (got an empty phase list)")
-    if p > PHASE_ALIGN and p % PHASE_ALIGN:
-        pad = PHASE_ALIGN - p % PHASE_ALIGN
-        ph = np.concatenate([ph, np.zeros((pad, 2), dtype)])
-    return ph
-
-
-def _sanitize_chunk(times, energy, valid=None, carry_t=None, carry_e=None):
-    """Host-side ingest guard: make each row's hold edges non-decreasing.
-
-    Keeps a sample iff its timestamp strictly exceeds the running max of
-    everything (valid) before it, including the previous chunk's carry;
-    dropped samples (reordered reads, masked slots) are replaced by the
-    last kept (t, E) so they become zero-width and their ΔE telescopes
-    into the next kept interval.  The common all-monotonic case is a
-    single vectorized check with no copies.
-    """
-    t = np.asarray(times)
-    e = np.asarray(energy)
-    f, c = t.shape
-    if valid is not None and bool(np.all(valid)):
-        valid = None
-    # duplicates (==) already replicate the previous publication and need
-    # no repair; only strict decreases and masked slots do.  Any reorder
-    # episode starts with an adjacent decrease, so this cheap check is
-    # sufficient to route to the repair path.
-    if valid is None \
-            and not (t[:, 1:] < t[:, :-1]).any() \
-            and (carry_t is None or not (t[:, :1] < carry_t).any()):
-        return t, e
-    lead = np.full((f, 1), -np.inf, t.dtype) if carry_t is None \
-        else np.asarray(carry_t, t.dtype)
-    tv = t if valid is None else np.where(valid, t, -np.inf)
-    run_max = np.maximum.accumulate(
-        np.concatenate([lead, tv], axis=1), axis=1)
-    keep = tv > run_max[:, :-1]
-    idx = np.broadcast_to(np.arange(c)[None, :], (f, c))
-    last = np.maximum.accumulate(np.where(keep, idx, -1), axis=1)
-    src = np.maximum(last, 0)
-    t_eff = np.take_along_axis(t, src, axis=1)
-    e_eff = np.take_along_axis(e, src, axis=1)
-    no_prev = last < 0                   # before the chunk's first kept
-    if carry_t is not None:
-        t_eff = np.where(no_prev, np.asarray(carry_t, t.dtype), t_eff)
-        e_eff = np.where(no_prev, np.asarray(carry_e, e.dtype), e_eff)
-    elif no_prev.any():
-        # first chunk: collapse the leading dropped run onto the first
-        # kept sample (zero width, zero energy)
-        first = np.argmax(keep, axis=1)[:, None]
-        t_eff = np.where(no_prev, np.take_along_axis(t, first, axis=1),
-                         t_eff)
-        e_eff = np.where(no_prev, np.take_along_axis(e, first, axis=1),
-                         e_eff)
-    return t_eff, e_eff
-
-
-@jax.jit
-def _carry_forward(t, v, valid, t_carry, v_carry):
-    """Mask invalid samples by replicating the last valid (t, v) pair.
-
-    Replicated samples form zero-width hold intervals -> zero energy.
-    The carry column (always valid) seeds rows whose chunk starts invalid.
-    """
-    aug_t = jnp.concatenate([t_carry, t], axis=1)
-    aug_v = jnp.concatenate([v_carry, v], axis=1)
-    ok = jnp.pad(valid, ((0, 0), (1, 0)), constant_values=True)
-    idx = jnp.broadcast_to(jnp.arange(aug_t.shape[1])[None, :], aug_t.shape)
-    last = jax.lax.cummax(jnp.where(ok, idx, 0), axis=1)
-    return (jnp.take_along_axis(aug_t, last, axis=1),
-            jnp.take_along_axis(aug_v, last, axis=1))
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def _integrate_chunk(t_aug, w_aug, phases, acc, *, interpret=False,
-                     use_kernel=True):
-    if use_kernel:
-        de = phase_integrate_kernel(t_aug, w_aug, phases,
-                                    interpret=interpret)
-    else:
-        de = phase_energies_ref(t_aug, w_aug, phases)
-    return acc + de
+# backwards-compatible alias (pre-pipeline internal name)
+_sanitize_chunk = sanitize_chunk
 
 
 class StreamingPhaseAccumulator:
     """Online E[stream, phase] from chunked sample-and-hold power streams.
 
-    Feed (times, watts) chunks of any fixed width; the carry column closes
-    the hold interval across the chunk boundary.  ``totals()`` never sees
-    more than one chunk on device.
+    Feed (times, watts) chunks of any fixed width; the carry column
+    closes the hold interval across the chunk boundary.  ``totals()``
+    never sees more than one chunk on device.
     """
 
     def __init__(self, phases, n_streams: int, *, dtype=np.float32,
                  interpret=None, use_kernel: bool = True):
-        self.phases = jnp.asarray(pad_phases(phases, dtype))
-        self.n_phases = len(np.asarray(phases).reshape(-1, 2))
-        self.interpret = auto_interpret(interpret)
+        self._integrate = PhaseIntegrateStage(
+            phases, n_streams, dtype=dtype, interpret=interpret,
+            use_kernel=use_kernel)
+        self._pipe = StreamPipeline(IngestStage(n_streams,
+                                                mode="maskfill"),
+                                    self._integrate)
+        self.phases = self._integrate.phases
+        self.n_phases = self._integrate.n_phases
+        self.interpret = self._integrate.interpret
         self.use_kernel = use_kernel
-        self._acc = jnp.zeros((n_streams, len(self.phases)), dtype)
-        self._t_carry = None     # (F, 1) last hold edge per stream
-        self._w_carry = None
 
     def update(self, times, watts, valid=None):
-        t = jnp.asarray(times)
-        w = jnp.asarray(watts)
-        if self._t_carry is None:
-            # first chunk: zero-width seed at the first VALID sample —
-            # seeding from a masked slot would turn its garbage timestamp
-            # into a hold-interval edge
-            if valid is None:
-                self._t_carry = t[:, :1]
-            else:
-                first = jnp.argmax(jnp.asarray(valid), axis=1)[:, None]
-                self._t_carry = jnp.take_along_axis(t, first, axis=1)
-            self._w_carry = jnp.zeros_like(w[:, :1])
-        if valid is None:
-            t_aug = jnp.concatenate([self._t_carry, t], axis=1)
-            w_aug = jnp.concatenate([self._w_carry, w], axis=1)
-        else:
-            t_aug, w_aug = _carry_forward(t, w, jnp.asarray(valid),
-                                          self._t_carry, self._w_carry)
-        self._acc = _integrate_chunk(t_aug, w_aug, self.phases, self._acc,
-                                     interpret=self.interpret,
-                                     use_kernel=self.use_kernel)
-        self._t_carry = t_aug[:, -1:]
-        self._w_carry = w_aug[:, -1:]
+        self._pipe.update(np.asarray(times), np.asarray(watts), valid)
         return self
 
     def totals(self):
         """(n_streams, n_phases) accumulated joules (host numpy)."""
-        return np.asarray(self._acc)[:, :self.n_phases]
-
-
-_SHARDED_STEP_CACHE: dict = {}
-
-
-def _sharded_steps(mesh, interpret: bool, use_kernel: bool):
-    """(step, step_first) with the fused kernel row-sharded over ``mesh``.
-
-    The attribution kernel is row-independent (each stream's ΔE/Δt and
-    phase overlaps touch only its own row; the phase table is
-    replicated), so the fleet axis partitions with zero collectives.
-    """
-    from repro.distributed.sharding import fleet_shard_map
-    key = (mesh, interpret, use_kernel)
-    fns = _SHARDED_STEP_CACHE.get(key)
-    if fns is not None:
-        return fns
-
-    def block(t_aug, e_aug, wrap_row, phases):
-        if use_kernel:
-            return fleet_attribute_kernel(t_aug, e_aug, wrap_row, phases,
-                                          interpret=interpret)
-        return fleet_attribute_ref(t_aug, e_aug, wrap_row, phases)
-
-    inner = fleet_shard_map(block, mesh, n_in=4, n_out=1,
-                            replicated_in=(3,))
-
-    @jax.jit
-    def step_first(t_chunk, e_chunk, period, phases, acc):
-        energy = inner(t_chunk, e_chunk, period[:, None], phases)
-        return acc + energy, t_chunk[:, -1:], e_chunk[:, -1:]
-
-    @jax.jit
-    def step(t_chunk, e_chunk, t_carry, e_carry, period, phases, acc):
-        t_aug = jnp.concatenate([t_carry, t_chunk], axis=1)
-        e_aug = jnp.concatenate([e_carry, e_chunk], axis=1)
-        energy = inner(t_aug, e_aug, period[:, None], phases)
-        return acc + energy, t_aug[:, -1:], e_aug[:, -1:]
-
-    _SHARDED_STEP_CACHE[key] = (step, step_first)
-    return step, step_first
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def _stream_step_first(t_chunk, e_chunk, period, phases, acc, *,
-                       interpret=False, use_kernel=True):
-    """First chunk: no carry to prepend — the fused kernel's native
-    convention (interval 0 is zero-width) already matches."""
-    wrap_row = period[:, None]
-    if use_kernel:
-        energy = fleet_attribute_kernel(t_chunk, e_chunk, wrap_row,
-                                        phases, interpret=interpret)
-    else:
-        energy = fleet_attribute_ref(t_chunk, e_chunk, wrap_row, phases)
-    return acc + energy, t_chunk[:, -1:], e_chunk[:, -1:]
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def _stream_step(t_chunk, e_chunk, t_carry, e_carry, period,
-                 phases, acc, *, interpret=False, use_kernel=True):
-    """One streaming step through the fused ΔE/Δt + phase-energy kernel.
-
-    Counter wrap is fixed per interval inside the kernel (no cumulative
-    unwrap state — ΔE telescopes across chunks through the carry sample).
-    """
-    t_aug = jnp.concatenate([t_carry, t_chunk], axis=1)      # (F, C+1)
-    e_aug = jnp.concatenate([e_carry, e_chunk], axis=1)
-    wrap_row = period[:, None]
-    if use_kernel:
-        energy = fleet_attribute_kernel(t_aug, e_aug, wrap_row, phases,
-                                        interpret=interpret)
-    else:
-        energy = fleet_attribute_ref(t_aug, e_aug, wrap_row, phases)
-    return acc + energy, t_aug[:, -1:], e_aug[:, -1:]
+        return self._integrate.totals()
 
 
 class FleetStream:
@@ -258,67 +76,33 @@ class FleetStream:
 
     State per stream: the last (t, E) sample — two scalars — plus the
     (F, P) energy accumulator.  Reconstruction and integration both run
-    through the Pallas kernels per chunk.
+    fused through the ``fleet_attribute`` Pallas kernel per chunk.
     """
 
     def __init__(self, phases, n_streams: int, wrap_period=None, *,
                  dtype=np.float32, interpret=None,
                  use_kernel: bool = True, mesh="auto"):
-        from repro.distributed.sharding import (fleet_mesh,
-                                                fleet_rows_divisible)
-        self.phases = jnp.asarray(pad_phases(phases, dtype))
-        self.n_phases = len(np.asarray(phases).reshape(-1, 2))
-        self.interpret = auto_interpret(interpret)
+        self._attr = CounterAttributeStage(
+            phases, n_streams, wrap_period, dtype=dtype,
+            interpret=interpret, use_kernel=use_kernel, mesh=mesh)
+        self._pipe = StreamPipeline(IngestStage(n_streams,
+                                                mode="sanitize"),
+                                    self._attr)
+        self.phases = self._attr.phases
+        self.n_phases = self._attr.n_phases
+        self.interpret = self._attr.interpret
         self.use_kernel = use_kernel
-        if mesh == "auto":
-            mesh = fleet_mesh()
-        if mesh is not None and not fleet_rows_divisible(mesh, n_streams):
-            mesh = None
-        self.mesh = mesh
-        wp = (np.zeros((n_streams,), dtype) if wrap_period is None
-              else np.asarray(wrap_period, dtype))
-        self._period = jnp.asarray(wp)
-        self._acc = jnp.zeros((n_streams, len(self.phases)), dtype)
-        self._t_carry = None
-        self._e_carry = None
+        self.mesh = self._attr.mesh
 
     def reset(self):
         """Zero the accumulator/carry for a fresh run (buffers reused)."""
-        self._acc = jnp.zeros_like(self._acc)
-        self._t_carry = None
-        self._e_carry = None
+        self._pipe.reset()
         return self
 
     def update(self, times, energy, valid=None):
-        first = self._t_carry is None
-        carry_t = None if first else np.asarray(self._t_carry)
-        carry_e = None if first else np.asarray(self._e_carry)
-        t_np, e_np = _sanitize_chunk(times, energy, valid,
-                                     carry_t, carry_e)
-        t = jnp.asarray(t_np)
-        e = jnp.asarray(e_np)
-        if self.mesh is not None:
-            sh_step, sh_first = _sharded_steps(self.mesh, self.interpret,
-                                               self.use_kernel)
-            if first:
-                self._acc, self._t_carry, self._e_carry = sh_first(
-                    t, e, self._period, self.phases, self._acc)
-            else:
-                self._acc, self._t_carry, self._e_carry = sh_step(
-                    t, e, self._t_carry, self._e_carry, self._period,
-                    self.phases, self._acc)
-            return self
-        if first:
-            self._acc, self._t_carry, self._e_carry = _stream_step_first(
-                t, e, self._period, self.phases, self._acc,
-                interpret=self.interpret, use_kernel=self.use_kernel)
-        else:
-            self._acc, self._t_carry, self._e_carry = _stream_step(
-                t, e, self._t_carry, self._e_carry, self._period,
-                self.phases, self._acc, interpret=self.interpret,
-                use_kernel=self.use_kernel)
+        self._pipe.update(np.asarray(times), np.asarray(energy), valid)
         return self
 
     def totals(self):
         """(n_streams, n_phases) accumulated joules (host numpy)."""
-        return np.asarray(self._acc)[:, :self.n_phases]
+        return self._attr.totals()

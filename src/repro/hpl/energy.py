@@ -69,7 +69,8 @@ def fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4, seed0=0,
 
 
 def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
-                         seed0=0, sensors_per_chip=3, interpret=None):
+                         seed0=0, sensors_per_chip=3, interpret=None,
+                         streaming=False, chunk=1024):
     """Per-node phase energies from FUSED cross-sensor streams.
 
     Where ``fleet_energize`` trusts chip0's energy counter alone, this
@@ -79,8 +80,12 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
     in ONE batched call across all nodes, then attributes on the fused
     power — the paper's §V-B time-aligned multi-sensor validation
     applied to the MxP accounting.  Returns one [PhaseEnergy] per node.
+
+    ``streaming=True`` runs the same accounting through the streaming
+    stage pipeline (``fleet.pipeline``) in ``chunk``-sized windows:
+    O(fleet x chunk) memory and online per-sensor delay tracking — the
+    long-HPL-run mode where sensor clocks drift.
     """
-    from repro.align import attribute_energy_fused
     from repro.core.calibration import nic_rail_corrections
     shifted, truth = phases_and_truth(tracer)
     # default 3: on-chip counter + on-chip power + off-chip PM — one
@@ -95,6 +100,13 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
         fabric = NodeFabric(chip_truths=[truth] * n_chips)
         traces = fabric.sample_all(ToolSpec(), seed=seed0 + node)
         groups.append([traces[n] for n in wanted])
+    if streaming:
+        from repro.fleet.pipeline import attribute_energy_fused_streaming
+        return attribute_energy_fused_streaming(
+            groups, shifted, reference=truth,
+            corrections=nic_rail_corrections(), chunk=chunk,
+            interpret=interpret)
+    from repro.align import attribute_energy_fused
     return attribute_energy_fused(groups, shifted, reference=truth,
                                   corrections=nic_rail_corrections(),
                                   interpret=interpret)

@@ -94,7 +94,7 @@ class ServeEngine:
 
     def attribute_phases(self, traces, *, corrections=None, depth=0,
                          t_shift=0.0, use_fleet=True, chunk=1024,
-                         fuse=False, reference=None):
+                         fuse=False, reference=None, streaming=False):
         """Per-phase energy for the engine's recorded serving phases.
 
         traces: {name: SensorTrace} (e.g. ``NodeFabric.sample_all``) or a
@@ -111,6 +111,10 @@ class ServeEngine:
         fused streams — returns {device: [PhaseEnergy]}.  ``reference``
         optionally passes the known phase schedule (PiecewisePower) for
         delay estimation; default is each device's first counter.
+        ``streaming=True`` runs the fused attribution through the
+        streaming stage pipeline (``fleet.pipeline``) in ``chunk``-sized
+        windows — per-sensor delays tracked online on sliding windows,
+        O(fleet x chunk) memory — instead of the batch align-and-fuse.
         """
         phases = [(n, a + t_shift, b + t_shift)
                   for n, a, b in self.tracer.phases(depth=depth)]
@@ -120,9 +124,18 @@ class ServeEngine:
             from repro.align import (attribute_energy_fused,
                                      group_traces_by_device)
             groups = group_traces_by_device(traces)
-            rows = attribute_energy_fused(list(groups.values()), phases,
-                                          corrections=corrections,
-                                          reference=reference)
+            if streaming:
+                from repro.fleet.pipeline import (
+                    attribute_energy_fused_streaming)
+                rows = attribute_energy_fused_streaming(
+                    list(groups.values()), phases,
+                    corrections=corrections, reference=reference,
+                    chunk=chunk)
+            else:
+                rows = attribute_energy_fused(list(groups.values()),
+                                              phases,
+                                              corrections=corrections,
+                                              reference=reference)
             return dict(zip(groups.keys(), rows))
         from repro.core.attribution import attribute_energy_many
         as_dict = isinstance(traces, dict)

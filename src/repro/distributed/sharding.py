@@ -163,13 +163,17 @@ class ShardingPlan:
 # ---------------------------------------------------------------------------
 
 def fleet_mesh(min_devices: int = 2) -> Optional[Mesh]:
-    """1-D mesh over every local device for fleet-row sharding.
+    """1-D mesh over every LOCAL device for fleet-row sharding.
 
     Returns None on a single-device host — the fleet pipeline then runs
-    exactly the unsharded path (parity oracle unchanged).
+    exactly the unsharded path (parity oracle unchanged).  Local devices
+    only: in a multi-process run (``jax.distributed``) ``jax.devices()``
+    spans every host, and a shard_map over non-addressable devices would
+    need cross-process XLA computations; the cross-host fleet split is
+    the per-host packing layer (``distributed.multihost``) instead.
     """
     import numpy as np
-    devices = jax.devices()
+    devices = jax.local_devices()
     if len(devices) < min_devices:
         return None
     return Mesh(np.asarray(devices), ("fleet",))
@@ -178,6 +182,20 @@ def fleet_mesh(min_devices: int = 2) -> Optional[Mesh]:
 def fleet_rows_divisible(mesh: Optional[Mesh], n_rows: int) -> bool:
     """True when the padded fleet axis splits evenly over the mesh."""
     return mesh is not None and n_rows % mesh.shape["fleet"] == 0
+
+
+def fleet_row_padding(mesh: Optional[Mesh], n_rows: int) -> int:
+    """Masked rows to append so the fleet axis splits over the mesh.
+
+    Non-divisible fleets used to fall back to unsharded execution; the
+    fleet consumers now pad with degenerate zero-width rows (exactly the
+    ``pack_traces`` all-padding convention: zero samples, zero energy)
+    and keep the mesh — the padding integrates to zero and is sliced off
+    the outputs.
+    """
+    if mesh is None:
+        return 0
+    return (-n_rows) % mesh.shape["fleet"]
 
 
 def fleet_spec(ndim: int) -> P:

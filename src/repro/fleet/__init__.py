@@ -23,10 +23,13 @@ subsystem is the batched counterpart of ``repro.core.reconstruction`` /
 
 Every future scaling PR (sharding, async ingest, multi-node) composes with
 the padded-fleet interface and the stage pipeline here instead of
-per-trace Python loops.
+per-trace Python loops.  Multi-host runs split the fleet by device group
+(``assign_groups`` -> ``HostShard``) and attribute through
+``repro.distributed.multihost.attribute_energy_fused_multihost``.
 """
-from repro.fleet.packing import (PackedFleet, pack_traces,  # noqa: F401
-                                 unpack_series)
+from repro.fleet.packing import (HostShard, PackedFleet,  # noqa: F401
+                                 assign_groups, pack_traces,
+                                 shard_from_assignment, unpack_series)
 from repro.fleet.reconstruct import (fleet_reconstruct,  # noqa: F401
                                      fleet_reconstruct_host)
 from repro.fleet.streaming import (FleetStream,  # noqa: F401

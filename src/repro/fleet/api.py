@@ -90,7 +90,25 @@ def attribute_energy_fused(trace_groups, phases, *, streaming=False,
     The streaming path supports the hold-resample convention only and
     its own keyword surface (chunk, window, hop, ema, tail, track, ...)
     — batch-only keywords such as ``mode`` or ``align`` raise TypeError.
+
+    ``shard``+``collectives`` (streaming only) span the fleet across
+    ``jax.distributed`` processes: ``trace_groups`` are then this
+    host's LOCAL device groups in ``shard.group_ids`` order, and every
+    host returns the same fleet-wide result — see
+    ``repro.distributed.multihost``.
     """
+    if kw.get("collectives") is not None:
+        assert streaming, \
+            "multi-host attribution runs the streaming pipeline " \
+            "(pass streaming=True)"
+        from repro.distributed.multihost import (
+            attribute_energy_fused_multihost)
+        return attribute_energy_fused_multihost(trace_groups, phases,
+                                                **kw)
+    assert kw.get("shard") is None, \
+        "shard without collectives — a multi-host run needs both"
+    kw.pop("collectives", None)
+    kw.pop("shard", None)
     if streaming:
         from repro.fleet.pipeline import attribute_energy_fused_streaming
         return attribute_energy_fused_streaming(trace_groups, phases,

@@ -64,16 +64,99 @@ class PackedFleet:
         return np.arange(self.shape[1])[None, :] < self.n_samples[:, None]
 
 
+@dataclasses.dataclass(frozen=True)
+class HostShard:
+    """One host's slice of a multi-host fleet, in GLOBAL coordinates.
+
+    The multi-host fleet layer splits the fleet by DEVICE GROUP (all
+    sensors observing one device stay together): every group's fusion
+    statistics, coverage patterns and phase integrals are then computed
+    entirely on the owning host, so the end-of-run cross-host reduction
+    is pure placement — bit-identical results however the groups land on
+    hosts.  Each host packs ONLY its own sensors; the global ids here
+    are the metadata that places its rows back into the fleet-wide
+    result.
+    """
+    host: int                   # this process's index
+    n_hosts: int
+    global_group_sizes: tuple   # sensors per device, EVERY device
+    group_ids: tuple            # global device indices owned by this host
+
+    def __post_init__(self):
+        assert 0 <= self.host < self.n_hosts, (self.host, self.n_hosts)
+        assert len(self.group_ids) > 0, \
+            f"host {self.host} owns no device groups " \
+            f"({self.n_hosts} hosts over " \
+            f"{len(self.global_group_sizes)} groups) — use fewer hosts"
+
+    @property
+    def local_group_sizes(self) -> list:
+        return [self.global_group_sizes[g] for g in self.group_ids]
+
+    @property
+    def n_local_streams(self) -> int:
+        return int(sum(self.local_group_sizes))
+
+    @property
+    def row_offsets(self) -> np.ndarray:
+        """(n_groups + 1,) global row offset of every device group."""
+        return np.concatenate(
+            [[0], np.cumsum(self.global_group_sizes)]).astype(np.int64)
+
+    @property
+    def row_ids(self) -> np.ndarray:
+        """(n_local_streams,) global row index of every local row."""
+        off = self.row_offsets
+        return np.concatenate(
+            [np.arange(off[g], off[g + 1]) for g in self.group_ids])
+
+    def take_rows(self, per_row):
+        """Select this host's rows from a fleet-wide per-row array."""
+        return np.asarray(per_row)[self.row_ids]
+
+
+def assign_groups(group_sizes, n_hosts: int, host: int) -> HostShard:
+    """Contiguous balanced device-group assignment (the default split).
+
+    ``np.array_split`` semantics over group indices: deterministic given
+    (group_sizes, n_hosts), ragged counts allowed — the first
+    ``n_groups % n_hosts`` hosts take one extra group.  Raises when a
+    host would own nothing (more hosts than device groups).
+    """
+    sizes = tuple(int(s) for s in group_sizes)
+    ids = np.array_split(np.arange(len(sizes)), n_hosts)[host]
+    return HostShard(host=host, n_hosts=n_hosts,
+                     global_group_sizes=sizes,
+                     group_ids=tuple(int(g) for g in ids))
+
+
+def shard_from_assignment(group_sizes, assignment, host: int,
+                          n_hosts: int = None) -> HostShard:
+    """HostShard for an ARBITRARY host←group map (``assignment[g]`` is
+    the owning host of group g) — the property-test surface: results
+    must not depend on which hosts own which groups."""
+    a = np.asarray(assignment, np.int64)
+    if n_hosts is None:
+        n_hosts = int(a.max()) + 1
+    return HostShard(host=host, n_hosts=n_hosts,
+                     global_group_sizes=tuple(int(s) for s in group_sizes),
+                     group_ids=tuple(int(g)
+                                     for g in np.nonzero(a == host)[0]))
+
+
 def pack_traces(traces, *, use_t_measured: bool = True,
                 dtype=np.float32, min_samples: int = 2,
-                out: PackedFleet = None) -> PackedFleet:
+                out: PackedFleet = None, t0: float = None) -> PackedFleet:
     """Pack ragged SensorTraces into a padded (fleet, samples) block.
 
     Rows are raw (duplicates and all); F is rounded up to ROW_ALIGN with
     degenerate all-padding rows so the Pallas row-tiling constraint holds
     for any trace count (1, 3, 17, ...).  Pass a previous ``out`` of the
     same shape to reuse its buffers (streaming ingest ring-buffer style:
-    no per-batch allocation/page faulting).
+    no per-batch allocation/page faulting).  ``t0`` pins the shared time
+    origin (default: the earliest sample of THESE traces) — a multi-host
+    fleet passes the all-reduced global minimum so every host's float32
+    rebase is bit-identical to a single-host pack of the same rows.
     """
     traces = list(traces)
     assert traces, "pack_traces needs at least one trace"
@@ -93,8 +176,9 @@ def pack_traces(traces, *, use_t_measured: bool = True,
     names = []
     # rebase in float64 BEFORE the dtype cast: one shared time origin,
     # one energy baseline per row (see PackedFleet docstring)
-    t0 = min(float((tr.t_measured if use_t_measured else tr.t_read)[0])
-             for tr in traces)
+    if t0 is None:
+        t0 = min(float((tr.t_measured if use_t_measured
+                        else tr.t_read)[0]) for tr in traces)
     for i, tr in enumerate(traces):
         k = len(tr)
         t = (tr.t_measured if use_t_measured else tr.t_read)

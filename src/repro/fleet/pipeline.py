@@ -56,12 +56,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
+import pickle
 
 import jax
 import numpy as np
 
 from repro.fleet.packing import ROW_ALIGN, _round_up, pack_traces
 from repro.fleet.reconstruct import auto_interpret
+
+logger = logging.getLogger(__name__)
 
 # phase_integrate/fleet_attribute tile phases in blocks of 32; phase
 # tables are always padded UP to the tile (zero-width windows integrate
@@ -685,11 +689,25 @@ class RegridFuseStage:
     ``AlignTrackStage`` or stay fixed.  ``flush`` emits the remaining
     slots once the run ends (rows that end early mask off exactly as in
     the batch regrid).
+
+    Multi-host: with ``collectives`` (a ``distributed.multihost``
+    HostCollectives), the per-host frontier is all-reduced (min) every
+    update, so every host emits exactly the same grid-slot windows in
+    lockstep regardless of which rows it owns.  Emission batching fixes
+    the floating-point accumulation order of the fusion statistics and
+    the downstream phase integrals, so the fleet-wide fused energies are
+    bit-stable under ANY host←row assignment — a host must therefore
+    drive its stage through the same number of ``update``/``flush``
+    calls as every other host (time-aligned replay windows over the
+    all-reduced global span do exactly this).  ``record=True`` keeps
+    every emitted window in ``self.emitted`` (test/diagnostic use:
+    memory grows with the run).
     """
 
     def __init__(self, group_sizes, *, grid_origin: float,
                  grid_step: float, delays=None, align=None,
                  tail: int = 256, var_floor: float = 0.25,
+                 collectives=None, record: bool = False,
                  interpret=None, use_kernel=None, host: bool = False):
         self.group_sizes = list(group_sizes)
         self.n_streams = int(sum(self.group_sizes))
@@ -699,6 +717,9 @@ class RegridFuseStage:
         self._fixed = (np.zeros((self.n_streams,)) if delays is None
                        else np.asarray(delays, np.float64).reshape(-1))
         self.var_floor = float(var_floor)
+        self.collectives = collectives
+        self.record = record
+        self.emitted: list = []
         self.interpret = auto_interpret(interpret)
         self.use_kernel = use_kernel
         self.host = host
@@ -715,6 +736,7 @@ class RegridFuseStage:
                                n_k=np.zeros((self.n_streams,)),
                                ssr=np.zeros((self.n_streams,)))
         self._t_first = None
+        self.emitted = []
         return self
 
     def _delays(self, f: int) -> np.ndarray:
@@ -748,7 +770,10 @@ class RegridFuseStage:
             self.carry.ssr[flo:fhi] += (resid * resid).sum(axis=1)
             flo = fhi
         self.carry.next_slot = hi + 1
-        return GriddedWindow(lo=lo, grid=grid64, values=vals, mask=mask)
+        gw = GriddedWindow(lo=lo, grid=grid64, values=vals, mask=mask)
+        if self.record:
+            self.emitted.append(gw)
+        return gw
 
     def update(self, chunk: ClosedWindow):
         n = self.n_streams
@@ -757,6 +782,12 @@ class RegridFuseStage:
         delays = self._delays(rows_t.shape[0])
         frontier = float((chunk.times[:n, -1].astype(np.float64)
                           - delays[:n]).min())
+        if self.collectives is not None:
+            # emit-frontier all-reduce: every host trails the globally
+            # slowest stream and emits identical slot windows (see class
+            # docstring: this is what makes the fleet-wide accumulation
+            # order — and hence the fused energies — assignment-stable)
+            frontier = self.collectives.allreduce_min(frontier)
         # a safety margin of 1% of a step keeps float32-rounded queries
         # strictly inside every row's closed span (re-emitted exactly at
         # flush time where the span bound is final)
@@ -784,6 +815,10 @@ class RegridFuseStage:
         if t_end is None:
             t_end = float((tc.t[:n, -1].astype(np.float64)
                            - delays[:n]).max())
+            if self.collectives is not None:
+                # cover through the globally LAST row (hosts whose rows
+                # end early mask off, exactly as in the batch regrid)
+                t_end = self.collectives.allreduce_max(t_end)
         hi = int(np.floor((t_end - self.origin) / self.step + 1e-9))
         if hi < self.carry.next_slot:
             return None
@@ -797,9 +832,16 @@ class RegridFuseStage:
     def weights(self) -> np.ndarray:
         """(n_streams,) end-of-run inverse-variance weights — the batch
         ``fuse_gridded`` weights, reduced incrementally."""
-        c = self.carry
-        var = c.ssr / np.maximum(c.n_k, 1.0)
-        return np.where(c.n_k > 1, 1.0 / (var + self.var_floor), 0.0)
+        return _ivw_weights(self.carry.n_k, self.carry.ssr,
+                            self.var_floor)
+
+
+def _ivw_weights(n_k, ssr, var_floor: float) -> np.ndarray:
+    """The batch ``fuse_gridded`` per-stream weight rule from the
+    additive sufficient statistics — ONE definition, shared by the
+    local path and the multi-host merge (bit-identity depends on it)."""
+    var = ssr / np.maximum(n_k, 1.0)
+    return np.where(n_k > 1, 1.0 / (var + var_floor), 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -830,14 +872,30 @@ class FusedPhaseAttributeStage:
     is sample-and-hold on the output grid, invalid slots are bridged by
     carrying the previous valid edge forward (their interval folds into
     the next valid slot), and the first valid slot seeds zero-width.
+
+    Multi-host: with ``collectives`` + ``shard``, ``group_sizes`` are
+    this host's LOCAL device groups and ``totals()``/``weights()``
+    become collective calls — every host posts its per-(device, phase,
+    coverage-pattern, stream) integrals plus the fuse stage's per-stream
+    (n_k, ssr) sufficient statistics, and all hosts assemble the same
+    fleet-wide result.  Because whole device groups live on one host,
+    the reduction is pure placement (no floating-point re-association):
+    the fleet answer is bit-identical however the groups were assigned.
     """
 
-    def __init__(self, phases, group_sizes, fuse: RegridFuseStage):
+    def __init__(self, phases, group_sizes, fuse: RegridFuseStage, *,
+                 collectives=None, shard=None):
         ph = np.asarray(phases, np.float64).reshape(-1, 2)
         self.phases = ph
         self.n_phases = len(ph)
         self.group_sizes = list(group_sizes)
         self.fuse = fuse
+        self.collectives = collectives
+        self.shard = shard
+        if collectives is not None:
+            assert shard is not None, \
+                "multi-host totals need the HostShard (global row ids)"
+            assert list(shard.local_group_sizes) == self.group_sizes
         self.carry = self._fresh()
 
     def _fresh(self):
@@ -879,15 +937,50 @@ class FusedPhaseAttributeStage:
             lo = hi
         return None
 
+    def _gathered(self):
+        """(integrals, group_sizes, w_flat): local, or the fleet-wide
+        merge when collectives are attached (a COLLECTIVE call: every
+        host must reach it in lockstep)."""
+        n = self.fuse.n_streams
+        if self.collectives is None:
+            return (self.carry.integrals, self.group_sizes,
+                    self.fuse.weights())
+        sh = self.shard
+        payload = pickle.dumps(
+            (tuple(sh.group_ids), self.carry.integrals,
+             self.fuse.carry.n_k[:n], self.fuse.carry.ssr[:n]))
+        parts = self.collectives.allgather_bytes(payload)
+        sizes = list(sh.global_group_sizes)
+        off = sh.row_offsets
+        integrals = [None] * len(sizes)
+        n_k = np.zeros((int(off[-1]),))
+        ssr = np.zeros((int(off[-1]),))
+        for raw in parts:
+            gids, ints, nk_l, ssr_l = pickle.loads(raw)
+            lo = 0
+            for j, g in enumerate(gids):
+                assert integrals[g] is None, \
+                    f"device group {g} owned by two hosts"
+                integrals[g] = ints[j]
+                k = sizes[g]
+                n_k[off[g]:off[g] + k] = nk_l[lo:lo + k]
+                ssr[off[g]:off[g] + k] = ssr_l[lo:lo + k]
+                lo += k
+        assert all(i is not None for i in integrals), \
+            "multi-host merge is missing device groups (unassigned?)"
+        return integrals, sizes, _ivw_weights(n_k, ssr,
+                                              self.fuse.var_floor)
+
     def totals(self) -> np.ndarray:
         """(n_devices, n_phases) fused joules, finalized with the
-        end-of-run inverse-variance weights."""
-        w_flat = self.fuse.weights()
-        out = np.zeros((len(self.group_sizes), self.n_phases))
+        end-of-run inverse-variance weights.  Fleet-wide (and identical
+        on every host) in multi-host mode."""
+        integrals, sizes, w_flat = self._gathered()
+        out = np.zeros((len(sizes), self.n_phases))
         lo = 0
-        for d, k in enumerate(self.group_sizes):
+        for d, k in enumerate(sizes):
             w = w_flat[lo:lo + k]
-            for p, acc in self.carry.integrals[d].items():
+            for p, acc in integrals[d].items():
                 member = (p >> np.arange(k)) & 1
                 w_tot = float((w * member).sum())
                 if w_tot > 0:
@@ -896,11 +989,12 @@ class FusedPhaseAttributeStage:
         return out
 
     def weights(self) -> list:
-        """Per-device normalized stream weights (diagnostics)."""
-        w_flat = self.fuse.weights()
+        """Per-device normalized stream weights (diagnostics);
+        fleet-wide in multi-host mode."""
+        _, sizes, w_flat = self._gathered()
         out = []
         lo = 0
-        for k in self.group_sizes:
+        for k in sizes:
             w = w_flat[lo:lo + k]
             out.append(w / max(w.sum(), 1e-30))
             lo += k
@@ -960,7 +1054,7 @@ class CounterAttributeStage:
                  use_kernel: bool = True, mesh="auto"):
         import jax.numpy as jnp
         from repro.distributed.sharding import (fleet_mesh,
-                                                fleet_rows_divisible)
+                                                fleet_row_padding)
         self.phases = jnp.asarray(pad_phases(phases, dtype))
         self.n_phases = len(np.asarray(phases,
                                        np.float64).reshape(-1, 2))
@@ -968,12 +1062,19 @@ class CounterAttributeStage:
         self.use_kernel = use_kernel
         if mesh == "auto":
             mesh = fleet_mesh()
-        if mesh is not None and not fleet_rows_divisible(mesh, n_streams):
-            mesh = None
+        # a stream count that doesn't divide the mesh pads masked rows
+        # up to divisibility (replicated-last-row, zero-width => exactly
+        # zero energy) instead of silently dropping to unsharded
+        self._row_pad = fleet_row_padding(mesh, n_streams)
+        if self._row_pad:
+            logger.debug("stream count %d not divisible by fleet mesh "
+                         "%d: padding %d masked rows", n_streams,
+                         mesh.shape["fleet"], self._row_pad)
         self.mesh = mesh
+        self.n_streams = n_streams
         wp = (np.zeros((n_streams,), dtype) if wrap_period is None
               else np.asarray(wrap_period, dtype))
-        self._period = jnp.asarray(wp)
+        self._period = jnp.asarray(np.pad(wp, (0, self._row_pad)))
         self._acc = jnp.zeros((n_streams, len(self.phases)), dtype)
 
     def reset(self):
@@ -983,11 +1084,20 @@ class CounterAttributeStage:
 
     def update(self, chunk: ClosedWindow):
         import jax.numpy as jnp
-        t = jnp.asarray(chunk.times)
-        e = jnp.asarray(chunk.values)
+        t_np, e_np = chunk.times, chunk.values
+        if self._row_pad:
+            # replicate the last row: its duplicate energy is sliced off
+            # inside the jitted step before the accumulate
+            t_np = np.concatenate(
+                [t_np, np.repeat(t_np[-1:], self._row_pad, axis=0)])
+            e_np = np.concatenate(
+                [e_np, np.repeat(e_np[-1:], self._row_pad, axis=0)])
+        t = jnp.asarray(t_np)
+        e = jnp.asarray(e_np)
         if self.mesh is not None:
             step = _sharded_attribute_step(self.mesh, self.interpret,
-                                           self.use_kernel)
+                                           self.use_kernel,
+                                           self.n_streams)
             self._acc = step(t, e, self._period, self.phases, self._acc)
         else:
             self._acc = _attribute_window(t, e, self._period, self.phases,
@@ -1022,13 +1132,16 @@ def _attribute_window(t_aug, e_aug, period, phases, acc, *,
 _SHARDED_STEP_CACHE: dict = {}
 
 
-def _sharded_attribute_step(mesh, interpret: bool, use_kernel: bool):
+def _sharded_attribute_step(mesh, interpret: bool, use_kernel: bool,
+                            n_streams: int):
     """The fused attribution step with the kernel row-sharded over
     ``mesh`` — the kernel is row-independent (each stream's dE/dt and
     phase overlaps touch only its own row; the phase table is
-    replicated), so the fleet axis partitions with zero collectives."""
+    replicated), so the fleet axis partitions with zero collectives.
+    Inputs may carry padding rows past ``n_streams`` (non-divisible
+    fleets); their energy is sliced off before the accumulate."""
     from repro.distributed.sharding import fleet_shard_map
-    key = (mesh, interpret, use_kernel)
+    key = (mesh, interpret, use_kernel, n_streams)
     fn = _SHARDED_STEP_CACHE.get(key)
     if fn is not None:
         return fn
@@ -1047,7 +1160,7 @@ def _sharded_attribute_step(mesh, interpret: bool, use_kernel: bool):
     @jax.jit
     def step(t_aug, e_aug, period, phases, acc):
         energy = inner(t_aug, e_aug, period[:, None], phases)
-        return acc + energy
+        return acc + energy[:n_streams]
 
     _SHARDED_STEP_CACHE[key] = step
     return step
@@ -1127,8 +1240,14 @@ class StreamRows:
 
 def pack_stream_rows(traces, *, corrections=None,
                      use_t_measured: bool = True, t0=None,
-                     dtype=np.float32) -> StreamRows:
-    """SensorTraces (mixed cumulative + power) -> raw streaming rows."""
+                     dtype=np.float32, cum_t0=None) -> StreamRows:
+    """SensorTraces (mixed cumulative + power) -> raw streaming rows.
+
+    ``t0``/``cum_t0`` pin the shared origin and the counter sub-pack's
+    intermediate origin — a multi-host fleet passes the all-reduced
+    global minima so each host's float32 two-step rebase is
+    bit-identical to a single-host pack of the same rows.
+    """
     from repro.core.calibration import apply_corrections
     traces = [apply_corrections(tr, corrections) for tr in traces]
     assert traces, "pack_stream_rows needs at least one trace"
@@ -1142,7 +1261,8 @@ def pack_stream_rows(traces, *, corrections=None,
     packed = None
     if cum:
         packed = pack_traces([traces[i] for i in cum],
-                             use_t_measured=use_t_measured, dtype=dtype)
+                             use_t_measured=use_t_measured, dtype=dtype,
+                             t0=cum_t0)
         s_cum = packed.shape[1]
     if pwr:
         s_pwr = max(max(len(traces[i]) for i in pwr), 2)
@@ -1181,14 +1301,18 @@ def pack_stream_rows(traces, *, corrections=None,
 
 
 def default_tail(rows: StreamRows, chunk: int, *, delays=None,
-                 max_lag: int = 64, grid_step: float = 1e-3) -> int:
+                 max_lag: int = 64, grid_step: float = 1e-3,
+                 cadence: float = None) -> int:
     """Tail columns needed so delayed queries never outrun the carry.
 
     The emit frontier trails the most-delayed stream, so every fast
     row's tail must span the delay SPREAD plus one window of slack
     (the track range bounds the spread when delays are live).
+    ``cadence`` overrides the local fastest-row spacing — a multi-host
+    run passes the all-reduced fleet-wide value (and fleet-wide delays)
+    so every host sizes the same tail against the global frontier.
     """
-    min_step = _min_cadence(rows)
+    min_step = cadence if cadence is not None else _min_cadence(rows)
     if delays is not None:
         d = np.asarray(delays, np.float64)
         spread = float(d.max() - min(d.min(), 0.0))
@@ -1209,7 +1333,8 @@ def _min_cadence(rows: StreamRows) -> float:
     return min(steps) if steps else 1e-3
 
 
-def stream_row_windows(rows: StreamRows, chunk: int = 1024):
+def stream_row_windows(rows: StreamRows, chunk: int = 1024, *,
+                       span=None, cadence: float = None):
     """Replay packed rows as TIME-aligned (fleet, C) windows.
 
     Heterogeneous cadences make equal COLUMN counts span wildly
@@ -1222,12 +1347,22 @@ def stream_row_windows(rows: StreamRows, chunk: int = 1024):
     window width pad by replicating their last sample (zero-width
     intervals — search-invisible, exactly zero energy).  Yields
     (times, values) blocks for ``StreamingFusedPipeline.update``.
+
+    ``span=(t_lo, t_hi)`` / ``cadence`` pin the window edges explicitly
+    — a multi-host replay passes the all-reduced FLEET-wide span and
+    fastest cadence so every host steps through identical window
+    boundaries in lockstep (the frontier all-reduce requires equal
+    update counts, and bit-stable emission requires equal edges).
     """
     f, s = rows.shape
     n = rows.n_streams
-    dt_win = max(chunk, 2) * _min_cadence(rows)
-    t_lo = float(rows.times[:n, 0].astype(np.float64).min())
-    t_hi = float(rows.times[:n, -1].astype(np.float64).max())
+    dt_win = max(chunk, 2) * (cadence if cadence is not None
+                              else _min_cadence(rows))
+    if span is not None:
+        t_lo, t_hi = float(span[0]), float(span[1])
+    else:
+        t_lo = float(rows.times[:n, 0].astype(np.float64).min())
+        t_hi = float(rows.times[:n, -1].astype(np.float64).max())
     n_win = max(int(np.ceil((t_hi - t_lo) / dt_win)), 1)
     edges = (t_lo + dt_win * np.arange(1, n_win)).astype(rows.times.dtype)
     idx = np.zeros((f, n_win + 1), np.int64)
@@ -1273,9 +1408,17 @@ class StreamingFusedPipeline:
                  delays=None, reference=None, track: bool = None,
                  window: int = 2048, hop: int = 512, max_lag: int = 64,
                  ema: float = 0.5, min_corr: float = 0.2, tail: int = 256,
-                 var_floor: float = 0.25, dtype=np.float32,
+                 var_floor: float = 0.25, collectives=None, shard=None,
+                 record: bool = False, dtype=np.float32,
                  interpret=None, use_kernel=None, host: bool = False):
         self.group_sizes = list(group_sizes)
+        self.collectives = collectives
+        self.shard = shard
+        if collectives is not None:
+            assert shard is not None, \
+                "multi-host pipelines need the HostShard metadata"
+            assert list(shard.local_group_sizes) == self.group_sizes, \
+                "group_sizes must be this host's local groups"
         n = int(sum(self.group_sizes))
         self.n_streams = n
         f = _round_up(n, ROW_ALIGN)
@@ -1307,10 +1450,13 @@ class StreamingFusedPipeline:
         self.fuse = RegridFuseStage(
             self.group_sizes, grid_origin=grid_origin,
             grid_step=grid_step, delays=delays, align=self.align,
-            tail=tail, var_floor=var_floor, interpret=interpret,
+            tail=tail, var_floor=var_floor, collectives=collectives,
+            record=record, interpret=interpret,
             use_kernel=use_kernel, host=host)
         self.attr = FusedPhaseAttributeStage(phases, self.group_sizes,
-                                             self.fuse)
+                                             self.fuse,
+                                             collectives=collectives,
+                                             shard=shard)
         stages = [self.ingest, self.reconstruct]
         if self.align is not None:
             stages.append(self.align)
@@ -1337,11 +1483,49 @@ class StreamingFusedPipeline:
         return self
 
     def totals(self) -> np.ndarray:
-        """(n_devices, n_phases) fused joules accumulated so far."""
+        """(n_devices, n_phases) fused joules accumulated so far.
+
+        Multi-host: FLEET-wide (global device order, identical on every
+        host) and a collective call — all hosts must reach it together.
+        """
         return self.attr.totals()
 
     def weights(self) -> list:
         return self.attr.weights()
+
+    def fused_series(self):
+        """(grid, watts, mask) for this host's LOCAL devices, from the
+        recorded emitted windows + end-of-run weights (needs
+        ``record=True``): the streaming counterpart of
+        ``FusedStream.watts``, used by the sharding-invariance tests.
+        Device groups are host-local, so no collectives are involved.
+        """
+        assert self.fuse.record, "fused_series() needs record=True"
+        ems = self.fuse.emitted
+        if not ems:
+            d = len(self.group_sizes)
+            return (np.zeros((0,)), np.zeros((d, 0)),
+                    np.zeros((d, 0), bool))
+        grid = np.concatenate([gw.grid for gw in ems])
+        vals = np.concatenate([gw.values for gw in ems], axis=1)
+        mask = np.concatenate([gw.mask for gw in ems], axis=1)
+        w_flat = self.fuse.weights()
+        d = len(self.group_sizes)
+        g = grid.shape[0]
+        watts = np.zeros((d, g))
+        out_mask = np.zeros((d, g), bool)
+        lo = 0
+        for di, k in enumerate(self.group_sizes):
+            w = w_flat[lo:lo + k][:, None]
+            m = mask[lo:lo + k]
+            v = vals[lo:lo + k].astype(np.float64)
+            w_tot = (w * m).sum(axis=0)
+            ok = w_tot > 0
+            watts[di] = np.where(ok, (w * v * m).sum(axis=0)
+                                 / np.maximum(w_tot, 1e-30), 0.0)
+            out_mask[di] = ok
+            lo += k
+        return grid, watts, out_mask
 
     def delays(self) -> np.ndarray:
         """(n_streams,) per-stream delay in use (tracked or fixed)."""

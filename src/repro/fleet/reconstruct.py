@@ -28,6 +28,7 @@ benchmarks to bound the float32 device error.
 from __future__ import annotations
 
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,8 @@ from repro.kernels.power_reconstruct.kernel import (
     power_reconstruct_fleet_kernel, power_reconstruct_rows_kernel)
 from repro.kernels.power_reconstruct.ref import (
     reconstruct_power_fleet_ref, reconstruct_power_rows_ref, wrapped_diff)
+
+logger = logging.getLogger(__name__)
 
 
 def auto_interpret(interpret):
@@ -130,32 +133,44 @@ def fleet_reconstruct(packed: PackedFleet, *, interpret=None,
 
     ``mesh="auto"`` shards the fleet axis across all local devices
     (``distributed.sharding.fleet_mesh``) whenever more than one device
-    is present and the padded row count divides evenly; pass ``None`` to
-    force single-device execution or an explicit 1-D ("fleet",) Mesh.
+    is present; row counts that don't divide the mesh are padded with
+    masked zero-width rows up to divisibility (sliced off the outputs),
+    so an awkward fleet size never silently drops to unsharded
+    execution.  Pass ``None`` to force single-device execution or an
+    explicit 1-D ("fleet",) Mesh.
     """
-    from repro.distributed.sharding import (fleet_mesh,
-                                            fleet_rows_divisible)
+    from repro.distributed.sharding import fleet_mesh, fleet_row_padding
     interpret = auto_interpret(interpret)
     energy = jnp.asarray(packed.energy)
     times = jnp.asarray(packed.times)
     if mesh == "auto":
         mesh = fleet_mesh()
-    if mesh is not None and not fleet_rows_divisible(mesh,
-                                                     packed.shape[0]):
-        mesh = None
+    f0 = packed.shape[0]
+    wrap_period = jnp.asarray(packed.wrap_period)
+    n_samples = jnp.asarray(packed.n_samples)
+    pad = fleet_row_padding(mesh, f0)
+    if pad:
+        logger.debug("fleet rows %d not divisible by mesh %d: padding "
+                     "%d masked rows", f0, mesh.shape["fleet"], pad)
+        energy = jnp.pad(energy, ((0, pad), (0, 0)))
+        times = jnp.pad(times, ((0, pad), (0, 0)))
+        wrap_period = jnp.pad(wrap_period, (0, pad))
+        n_samples = jnp.pad(n_samples, (0, pad))
     if mesh is not None:
         fast = _fleet_fast_sharded(mesh, interpret, use_kernel)
         power, valid, reordered = fast(
-            energy, times,
-            jnp.asarray(packed.wrap_period).reshape(-1, 1),
-            jnp.asarray(packed.n_samples).reshape(-1, 1))
+            energy, times, wrap_period.reshape(-1, 1),
+            n_samples.reshape(-1, 1))
+        if pad:
+            power, times, valid = (power[:f0], times[:f0], valid[:f0])
     else:
         power, valid, reordered = _fleet_fast(
-            energy, times, jnp.asarray(packed.wrap_period),
-            jnp.asarray(packed.n_samples), interpret=interpret,
+            energy, times, wrap_period, n_samples, interpret=interpret,
             use_kernel=use_kernel)
     if bool(np.any(np.asarray(reordered))):
-        return _fleet_slow(energy, times, jnp.asarray(packed.valid),
+        return _fleet_slow(jnp.asarray(packed.energy),
+                           jnp.asarray(packed.times),
+                           jnp.asarray(packed.valid),
                            jnp.asarray(packed.wrap_period),
                            interpret=interpret, use_kernel=use_kernel)
     return power, times, valid

@@ -70,7 +70,8 @@ def fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4, seed0=0,
 
 def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
                          seed0=0, sensors_per_chip=3, interpret=None,
-                         streaming=False, chunk=1024):
+                         streaming=False, chunk=1024, shard=None,
+                         collectives=None):
     """Per-node phase energies from FUSED cross-sensor streams.
 
     Where ``fleet_energize`` trusts chip0's energy counter alone, this
@@ -85,6 +86,13 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
     stage pipeline (``fleet.pipeline``) in ``chunk``-sized windows:
     O(fleet x chunk) memory and online per-sensor delay tracking — the
     long-HPL-run mode where sensor clocks drift.
+
+    ``shard``+``collectives`` split the fleet across ``jax.distributed``
+    processes: this host simulates (in production: reads) ONLY the
+    nodes its ``HostShard`` assigns it — per-node seeds keep each
+    node's sensor fabric identical to the single-host run — and the
+    fleet-wide result comes back on every host (see
+    ``repro.distributed.multihost``).
     """
     from repro.core.calibration import nic_rail_corrections
     shifted, truth = phases_and_truth(tracer)
@@ -95,11 +103,25 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
     wanted = ["chip0_energy", "chip0_power_inst", "pm_accel0_power",
               "pm_accel0_energy", "chip0_power_avg"][:max(sensors_per_chip,
                                                           1)]
+    assert (shard is None) == (collectives is None), \
+        "shard and collectives come together (a shard without " \
+        "collectives would silently attribute this host's nodes only)"
+    local_nodes = (range(n_nodes) if shard is None
+                   else list(shard.group_ids))
     groups = []
-    for node in range(n_nodes):
+    for node in local_nodes:
         fabric = NodeFabric(chip_truths=[truth] * n_chips)
         traces = fabric.sample_all(ToolSpec(), seed=seed0 + node)
         groups.append([traces[n] for n in wanted])
+    if collectives is not None:
+        assert shard is not None and len(shard.global_group_sizes) \
+            == n_nodes, "HostShard must cover all n_nodes groups"
+        from repro.distributed.multihost import (
+            attribute_energy_fused_multihost)
+        return attribute_energy_fused_multihost(
+            groups, shifted, shard=shard, collectives=collectives,
+            reference=truth, corrections=nic_rail_corrections(),
+            chunk=chunk, interpret=interpret)
     if streaming:
         from repro.fleet.pipeline import attribute_energy_fused_streaming
         return attribute_energy_fused_streaming(

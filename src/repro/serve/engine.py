@@ -94,7 +94,8 @@ class ServeEngine:
 
     def attribute_phases(self, traces, *, corrections=None, depth=0,
                          t_shift=0.0, use_fleet=True, chunk=1024,
-                         fuse=False, reference=None, streaming=False):
+                         fuse=False, reference=None, streaming=False,
+                         shard=None, collectives=None):
         """Per-phase energy for the engine's recorded serving phases.
 
         traces: {name: SensorTrace} (e.g. ``NodeFabric.sample_all``) or a
@@ -115,6 +116,11 @@ class ServeEngine:
         streaming stage pipeline (``fleet.pipeline``) in ``chunk``-sized
         windows — per-sensor delays tracked online on sliding windows,
         O(fleet x chunk) memory — instead of the batch align-and-fuse.
+        ``shard``+``collectives`` (streaming only) extend that pipeline
+        across ``jax.distributed`` processes: THIS engine's traces are
+        the local device groups described by the HostShard, and the
+        returned dict covers the local devices with fleet-consistent
+        energies (see ``repro.distributed.multihost``).
         """
         phases = [(n, a + t_shift, b + t_shift)
                   for n, a, b in self.tracer.phases(depth=depth)]
@@ -124,7 +130,17 @@ class ServeEngine:
             from repro.align import (attribute_energy_fused,
                                      group_traces_by_device)
             groups = group_traces_by_device(traces)
-            if streaming:
+            if collectives is not None:
+                assert streaming, \
+                    "multi-host attribution runs the streaming pipeline"
+                from repro.distributed.multihost import (
+                    attribute_energy_fused_multihost)
+                all_rows = attribute_energy_fused_multihost(
+                    list(groups.values()), phases, shard=shard,
+                    collectives=collectives, corrections=corrections,
+                    reference=reference, chunk=chunk)
+                rows = [all_rows[g] for g in shard.group_ids]
+            elif streaming:
                 from repro.fleet.pipeline import (
                     attribute_energy_fused_streaming)
                 rows = attribute_energy_fused_streaming(

@@ -1,0 +1,58 @@
+"""Deterministic sensor-fleet simulation shared by the multihost tests.
+
+Every spawned worker re-simulates the SAME traces from the same seeds
+(the simulator is a pure function of (spec, tool, truth, seed)), so no
+trace data ever crosses the process boundary — exactly how a real
+multi-host deployment works: each host reads only its own sensors, and
+only the tiny reductions travel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ToolSpec, simulate_sensor, square_wave
+from repro.core.measurement_model import SensorSpec
+
+SENSORS_PER_DEVICE = 2
+
+
+def sim_groups(n_devices: int, seed: int = 0, span_s: float = 2.5,
+               noise: float = 3.0):
+    """Per device: a wrapping energy counter + a noisy power sensor with
+    distinct configured delays (the delay spread creates emit-frontier
+    skew between hosts)."""
+    truth = square_wave(span_s / 4.0, 3, lead_s=span_s / 8,
+                        tail_s=span_s / 8)
+    tool = ToolSpec(0.9e-3)
+    groups, delays = [], []
+    for d in range(n_devices):
+        specs = [
+            SensorSpec(name=f"d{d}_energy", scope="chip",
+                       kind="energy_cum", quantum=1e-6, wrap_bits=26,
+                       delay_s=0.004 * (d % 5)),
+            SensorSpec(name=f"d{d}_power", scope="chip",
+                       kind="power_inst", noise_w=noise, quantum=1e-6,
+                       delay_s=0.011 + 0.003 * (d % 3)),
+        ]
+        groups.append([simulate_sensor(sp, tool, truth,
+                                       seed=seed + 31 * d + i)
+                       for i, sp in enumerate(specs)])
+        delays.extend(sp.delay_s for sp in specs)
+    return truth, groups, np.asarray(delays, np.float64)
+
+
+def shared_grid_and_phases(groups, n_phases: int = 6):
+    """One explicit output grid + phase windows derived from the trace
+    span — global inputs every worker (and the batch oracle) shares."""
+    t0 = min(float(tr.t_measured[0]) for g in groups for tr in g)
+    t1 = max(float(tr.t_measured[-1]) for g in groups for tr in g)
+    grid = np.arange(t0, t1, 0.51e-3)
+    edges = np.linspace(float(grid[0]), float(grid[-1]), n_phases + 1)
+    phases = [(f"p{k}", float(a), float(b))
+              for k, (a, b) in enumerate(zip(edges[:-1], edges[1:]))]
+    return grid, phases
+
+
+def energy_matrix(rows) -> np.ndarray:
+    """[[PhaseEnergy]] -> (n_devices, n_phases) joules."""
+    return np.array([[p.energy_j for p in row] for row in rows])

@@ -1,0 +1,69 @@
+"""Meta-tests of the spawn harness itself: result ordering, child
+assertion/exit-code propagation, and timeout cleanup (no zombie workers,
+coordinator port released)."""
+import os
+import time
+
+import pytest
+
+from multihost.harness import (MultihostTimeout, WorkerFailed, free_port,
+                               port_is_free, run_multihost)
+
+
+def _ok_worker(x):
+    import jax
+    return (jax.process_index(), jax.process_count(), x)
+
+
+def _assert_on_1():
+    import jax
+    assert jax.process_index() != 1, "boom-on-proc-1"
+    return "ok"
+
+
+def _exit_3_on_0():
+    import jax
+    if jax.process_index() == 0:
+        os._exit(3)
+    return "survived"
+
+
+def _hang_forever():
+    time.sleep(600)
+
+
+def test_harness_returns_results_in_process_order():
+    out = run_multihost(_ok_worker, 2, args=(7,))
+    assert out == [(0, 2, 7), (1, 2, 7)]
+
+
+def test_harness_propagates_child_assertion_failure():
+    with pytest.raises(WorkerFailed) as ei:
+        run_multihost(_assert_on_1, 2)
+    assert ei.value.process_id == 1
+    assert "AssertionError" in ei.value.detail
+    assert "boom-on-proc-1" in ei.value.detail
+
+
+def test_harness_propagates_child_exit_code():
+    with pytest.raises(WorkerFailed) as ei:
+        run_multihost(_exit_3_on_0, 2)
+    assert ei.value.process_id == 0
+    assert "code 3" in ei.value.detail
+
+
+def test_harness_timeout_kills_and_releases_port():
+    """A hung fleet must not leave zombie workers or a bound coordinator
+    port behind (CI hygiene: the next spawn run reuses the machine)."""
+    port = free_port()
+    t0 = time.monotonic()
+    with pytest.raises(MultihostTimeout) as ei:
+        run_multihost(_hang_forever, 2, timeout=15, port=port)
+    assert time.monotonic() - t0 < 60
+    assert len(ei.value.pids) == 2
+    for pid in ei.value.pids:
+        # killed AND reaped: the pid no longer exists (a zombie would
+        # still answer signal 0)
+        with pytest.raises(ProcessLookupError):
+            os.kill(pid, 0)
+    assert port_is_free(port)

@@ -10,9 +10,10 @@ import pytest
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_py(code):
+def run_py(code, n_devices=8):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = SRC
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, env=env,
@@ -246,6 +247,85 @@ def test_fleet_sharded_matches_host_oracle():
                                    rtol=1e-6, atol=1e-4)
         print("fleet sharding OK")
     """)
+
+
+def test_fleet_nondivisible_rows_pad_and_stay_sharded():
+    """Fleet sizes that do NOT divide the mesh (rows = mesh±1 and the
+    8-row pack tile on a 3-device mesh) must pad masked rows up to
+    divisibility and KEEP the sharded path — the old fallback silently
+    dropped to unsharded execution.  Padded results must equal the
+    unsharded path / the float64 host oracle."""
+    run_py("""
+        import numpy as np, jax
+        assert jax.device_count() == 3
+        from repro.distributed.sharding import (fleet_mesh,
+                                                fleet_row_padding,
+                                                fleet_rows_divisible)
+        from repro.fleet import (FleetStream, fleet_reconstruct,
+                                 fleet_reconstruct_host, pack_traces)
+        from repro.core.measurement_model import SensorSpec
+        from repro.core.sensors import SensorTrace
+
+        mesh = fleet_mesh()
+        assert mesh is not None and mesh.shape["fleet"] == 3
+        assert not fleet_rows_divisible(mesh, 8)
+        assert fleet_row_padding(mesh, 8) == 1
+        assert fleet_row_padding(mesh, 16) == 2
+
+        def make_traces(n):
+            rng = np.random.default_rng(5)
+            out = []
+            for i in range(n):
+                k = 260 - int(rng.integers(0, 30))
+                dt = rng.uniform(0.5e-3, 2e-3, k)
+                t = np.cumsum(dt); p = rng.uniform(40, 260, k)
+                e = np.cumsum(p * dt)
+                wb = 24 if i % 2 == 0 else 0
+                spec = SensorSpec(name=f"s{i}", scope="chip",
+                                  kind="energy_cum", quantum=1e-6,
+                                  wrap_bits=wb)
+                if wb:
+                    e = np.mod(e, (2.0 ** wb) * spec.quantum)
+                out.append(SensorTrace(spec.name, spec, t + 1e-4, t, e))
+            return out
+
+        # reconstruction: 6 traces -> F=8 rows, 3-device mesh -> pad 9
+        packed = pack_traces(make_traces(6))
+        assert packed.shape[0] == 8
+        power, times, valid = fleet_reconstruct(packed)   # auto mesh
+        p_un, _, v_un = fleet_reconstruct(packed, mesh=None)
+        ph, th, vh = fleet_reconstruct_host(packed)
+        pj, vj = np.asarray(power), np.asarray(valid)
+        assert pj.shape[0] == 8                  # padding sliced off
+        assert (vj == vh).all() and (vj == np.asarray(v_un)).all()
+        rel = (np.abs(pj[vj] - ph[vh])
+               / np.maximum(np.abs(ph[vh]), 1.0)).max()
+        assert rel <= 1e-5, rel
+        np.testing.assert_allclose(pj, np.asarray(p_un), rtol=1e-6,
+                                   atol=1e-5)
+
+        # streamed attribution at rows = mesh - 1 and mesh + 1
+        rng = np.random.default_rng(11)
+        for n_rows in (2, 4):
+            dt = rng.uniform(0.5e-3, 2e-3, (n_rows, 300))
+            t = np.cumsum(dt, axis=1).astype(np.float32)
+            p = rng.uniform(40, 260, (n_rows, 300))
+            e = np.cumsum(p * dt, axis=1).astype(np.float32)
+            span = float(t.max())
+            edges = np.linspace(0.0, span, 4)
+            wins = list(zip(edges[:-1], edges[1:]))
+            s_sh = FleetStream(wins, n_rows)             # auto mesh
+            s_un = FleetStream(wins, n_rows, mesh=None)
+            assert s_sh.mesh is not None, n_rows
+            assert s_sh._attr._row_pad == (-n_rows) % 3, n_rows
+            for lo in range(0, 300, 100):
+                s_sh.update(t[:, lo:lo + 100], e[:, lo:lo + 100])
+                s_un.update(t[:, lo:lo + 100], e[:, lo:lo + 100])
+            assert s_sh.totals().shape == (n_rows, 3)
+            np.testing.assert_allclose(s_sh.totals(), s_un.totals(),
+                                       rtol=1e-6, atol=1e-4)
+        print("nondivisible fleet padding OK")
+    """, n_devices=3)
 
 
 def test_dryrun_single_cell_tiny_mesh():

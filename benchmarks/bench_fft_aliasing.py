@@ -1,7 +1,6 @@
 """Paper Fig. 10: FFT of ΔE/Δt power for a low-frequency (10 Hz) and a
 high-frequency (250 Hz) square wave — clean harmonics vs folded peak +
 raised noise floor."""
-import numpy as np
 
 from benchmarks.common import timed
 from repro.core import (ToolSpec, delta_e_over_delta_t, fft_analysis,
@@ -28,10 +27,12 @@ def main():
     print("# Fig.10 — FFT aliasing")
     for freq, spec in out.items():
         print(f"  {freq:5.0f} Hz wave -> peak {spec.peak_hz:7.1f} Hz  "
-              f"folded={spec.folded}  noise_floor={spec.noise_floor_ratio:.2e}")
+              f"folded={spec.folded}  "
+              f"noise_floor={spec.noise_floor_ratio:.2e}")
     lo, hi = out[10.0], out[250.0]
     derived = (f"10Hz_peak={lo.peak_hz:.1f}Hz(clean={not lo.folded}), "
-               f"250Hz_folded={hi.folded or hi.noise_floor_ratio > lo.noise_floor_ratio}")
+               f"250Hz_folded="
+               f"{hi.folded or hi.noise_floor_ratio > lo.noise_floor_ratio}")
     return us, derived
 
 

@@ -32,8 +32,9 @@ def run():
 def main():
     out, us = timed(run)
     print(f"# Fig.8 / §V-B3 — HPG-MxP full vs mixed ({N_NODES} nodes)")
-    print(f"  node energy: full {out['full_j'][0]:.1f}±{out['full_j'][1]:.1f} J"
-          f"  mixed {out['mixed_j'][0]:.1f}±{out['mixed_j'][1]:.1f} J"
+    print(f"  node energy: "
+          f"full {out['full_j'][0]:.1f}±{out['full_j'][1]:.1f} J"
+          f" mixed {out['mixed_j'][0]:.1f}±{out['mixed_j'][1]:.1f} J"
           f"  saving {out['saving']*100:.0f}%")
     d = out["dec"]
     print(f"  decomposition: time x{d['time_ratio']:.2f} "

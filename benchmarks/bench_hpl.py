@@ -24,8 +24,9 @@ def run():
 def main():
     out, us = timed(run)
     print(f"# Fig.7 / §V-B2 — HPL vs HPL-MxP over {N_NODES} nodes (n={N})")
-    print(f"  node energy: full {out['full_j'][0]:.1f}±{out['full_j'][1]:.1f} J"
-          f"   mxp {out['mxp_j'][0]:.1f}±{out['mxp_j'][1]:.1f} J"
+    print(f"  node energy: "
+          f"full {out['full_j'][0]:.1f}±{out['full_j'][1]:.1f} J"
+          f"  mxp {out['mxp_j'][0]:.1f}±{out['mxp_j'][1]:.1f} J"
           f"   saving {out['saving']*100:.0f}%")
     d = out["dec"]
     print(f"  decomposition: time x{d['time_ratio']:.2f} "

@@ -13,8 +13,6 @@ simulation excluded) at each host count, and the weak-scaling
 efficiency  eff = t(1 host) / t(N hosts)  (1.0 = free scaling).
 Derived CSV metric: ``eff2`` at 2 hosts.
 """
-import numpy as np
-
 from benchmarks.common import smoke
 
 GROUPS_PER_HOST = smoke(8, 2)
@@ -28,7 +26,6 @@ def _bench_worker(groups_per_host, span_s, chunk):
     import time
 
     import jax
-    import numpy as np
     from multihost.simdata import shared_grid_and_phases, sim_groups
     from repro.distributed.multihost import (
         CoordinatorCollectives, attribute_energy_fused_multihost)

@@ -1,6 +1,5 @@
 """Paper Fig. 5: delay / response (10-90%) / recovery (90-10%) per sensor
 under the 1 s idle / 1 s active square wave; ΔE/Δt vs filtered counters."""
-import numpy as np
 
 from benchmarks.common import timed
 from repro.core import ToolSpec, characterize_sensor, square_wave

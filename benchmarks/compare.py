@@ -1,0 +1,152 @@
+"""Benchmark regression gate: compare a smoke run against the baseline.
+
+    python benchmarks/compare.py --baseline benchmarks/baseline.json \
+        --results bench-results.csv --out bench-compare.md
+
+Reads the ``name,us_per_call,derived`` CSV that ``run.py`` emits and the
+checked-in ``baseline.json`` (regenerate with ``--write-baseline`` after
+an intentional perf change), writes a markdown comparison table, and
+exits non-zero when
+
+  * a bench FAILED or went missing,
+  * throughput regressed by more than ``--max-slowdown`` (default 1.5x;
+    ``REPRO_BENCH_MAX_SLOWDOWN`` overrides — benches faster than
+    ``--min-us`` are exempt from the ratio gate, their absolute times
+    are too noisy to gate on), or
+  * a parity metric drifted: every numeric key recorded under a
+    bench's ``parity`` map in the baseline (e.g. ``rel_err``) must stay
+    within max(10x its baseline value, ``--parity-floor``).
+
+Baselines are recorded from a ``run.py --smoke`` run; the slowdown
+margin absorbs runner-to-runner speed differences, the parity gate does
+not depend on machine speed at all.
+"""
+import argparse
+import json
+import os
+import re
+import sys
+from pathlib import Path
+
+_NUM = re.compile(r"^[+-]?(\d+\.?\d*|\.\d+)([eE][+-]?\d+)?$")
+
+
+def parse_results(path):
+    """CSV -> {name: (us_per_call, {derived key: float})}."""
+    out = {}
+    for line in Path(path).read_text().splitlines():
+        line = line.strip()
+        if not line or line.startswith("name,"):
+            continue
+        name, us, derived = line.split(",", 2)
+        metrics = {}
+        for tok in derived.split(","):
+            if "=" not in tok:
+                continue
+            k, _, v = tok.partition("=")
+            if _NUM.match(v.strip()):
+                metrics[k.strip()] = float(v)
+        out[name] = (float(us), metrics)
+    return out
+
+
+def write_baseline(results, path):
+    base = {}
+    for name, (us, metrics) in results.items():
+        parity = {k: v for k, v in metrics.items()
+                  if k in ("rel_err", "parity")}
+        base[name] = {"us_per_call": us, "parity": parity}
+    Path(path).write_text(json.dumps(base, indent=2, sort_keys=True)
+                          + "\n")
+    print(f"baseline written to {path}")
+
+
+def compare(baseline, results, *, max_slowdown, min_us, parity_floor):
+    """-> (rows for the table, [failure strings])."""
+    rows, failures = [], []
+    for name, base in sorted(baseline.items()):
+        if name not in results:
+            failures.append(f"{name}: missing from results")
+            rows.append((name, base["us_per_call"], None, "-", "MISSING"))
+            continue
+        us, metrics = results[name]
+        b_us = float(base["us_per_call"])
+        if us < 0:
+            failures.append(f"{name}: bench FAILED")
+            rows.append((name, b_us, us, "-", "FAILED"))
+            continue
+        ratio = us / b_us if b_us > 0 else 1.0
+        status = "ok"
+        if us > min_us and b_us > min_us and ratio > max_slowdown:
+            status = f"SLOW x{ratio:.2f} > x{max_slowdown:.2f}"
+            failures.append(f"{name}: {us:.0f}us vs baseline "
+                            f"{b_us:.0f}us ({status})")
+        parity_bits = []
+        for k, b_v in base.get("parity", {}).items():
+            v = metrics.get(k)
+            if v is None:
+                status = f"parity metric {k} missing"
+                failures.append(f"{name}: {status}")
+                continue
+            limit = max(10.0 * float(b_v), parity_floor)
+            parity_bits.append(f"{k}={v:.1e} (≤{limit:.1e})")
+            if v > limit:
+                status = f"PARITY {k}={v:.1e} > {limit:.1e}"
+                failures.append(f"{name}: drifted {status}")
+        rows.append((name, b_us, us, f"x{ratio:.2f}",
+                     status if status != "ok"
+                     else "ok " + " ".join(parity_bits)))
+    return rows, failures
+
+
+def render(rows, failures):
+    lines = ["# Benchmark comparison (smoke) vs checked-in baseline",
+             "",
+             "| bench | baseline µs | current µs | ratio | status |",
+             "|---|---:|---:|---:|---|"]
+    for name, b_us, us, ratio, status in rows:
+        cur = "-" if us is None else f"{us:.0f}"
+        lines.append(f"| {name} | {b_us:.0f} | {cur} | {ratio} "
+                     f"| {status} |")
+    lines.append("")
+    lines.append("**GATE: FAIL**" if failures else "**GATE: pass**")
+    for f in failures:
+        lines.append(f"- {f}")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--results", required=True)
+    ap.add_argument("--out", default=None,
+                    help="also write the markdown table here (artifact)")
+    ap.add_argument("--max-slowdown", type=float,
+                    default=float(os.environ.get(
+                        "REPRO_BENCH_MAX_SLOWDOWN", "1.5")))
+    ap.add_argument("--min-us", type=float, default=500.0,
+                    help="exempt sub-noise benches from the ratio gate")
+    ap.add_argument("--parity-floor", type=float, default=1e-9)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from --results "
+                         "instead of gating")
+    args = ap.parse_args(argv)
+    results = parse_results(args.results)
+    if args.write_baseline:
+        write_baseline(results, args.baseline)
+        return
+    baseline = json.loads(Path(args.baseline).read_text())
+    rows, failures = compare(baseline, results,
+                             max_slowdown=args.max_slowdown,
+                             min_us=args.min_us,
+                             parity_floor=args.parity_floor)
+    text = render(rows, failures)
+    print(text)
+    if args.out:
+        Path(args.out).write_text(text)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,6 @@ def table(mesh="16x16"):
             continue
         t = r["roofline"]
         dom = r["bottleneck"]
-        frac = t[dom] / max(sum(t.values()), 1e-30)
         out.append({
             "arch": r["arch"], "shape": r["shape"], "status": "ok",
             "compute_s": t["compute_s"], "memory_s": t["memory_s"],
@@ -57,7 +56,8 @@ def main():
               f"{r['mem_gb']:7.1f}")
     n_compute = sum(1 for r in ok if r["bottleneck"] == "compute_s")
     derived = (f"cells={len(ok)},compute_bound={n_compute},"
-               f"median_useful={sorted(r['useful_ratio'] for r in ok)[len(ok)//2]:.2f}"
+               f"median_useful="
+               f"{sorted(r['useful_ratio'] for r in ok)[len(ok) // 2]:.2f}"
                if ok else "no dryrun records")
     return us, derived
 

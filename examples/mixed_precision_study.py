@@ -34,7 +34,7 @@ def main():
           f"power x{dec['power_ratio']:.2f} "
           "(saving dominated by time-to-solution, as in the paper)")
 
-    print(f"\n== HPG-MxP full vs mixed (64^3 grid) ==")
+    print("\n== HPG-MxP full vs mixed (64^3 grid) ==")
     rhs = make_poisson(64)
     _, f_info = hpg_solve(rhs, n_iters=80, mixed=False)
     _, m_info = hpg_solve(rhs, n_iters=80, mixed=True)

@@ -34,7 +34,8 @@ derived = delta_e_over_delta_t(traces["chip0_energy"])
 averaged = power_trace_series(traces["chip0_power_avg"])
 active = (derived.t > 4.2) & (derived.t < 4.9)      # inside an active phase
 active_avg = (averaged.t > 4.2) & (averaged.t < 4.9)
-print(f"truth active power:        215.0 W")
+print("truth active power:        215.0 W")
 print(f"ΔE/Δt steady estimate:     {np.mean(derived.watts[active]):7.1f} W")
-print(f"averaged-counter estimate: {np.mean(averaged.watts[active_avg]):7.1f} W"
+print(f"averaged-counter estimate: "
+      f"{np.mean(averaged.watts[active_avg]):7.1f} W"
       f"   <- smoothed by the undocumented firmware filter")

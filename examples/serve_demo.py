@@ -222,7 +222,6 @@ def main():
     # energy must equal the counter's unwrapped ΔE over what was ingested
     for i, tr in enumerate(chip_list):
         tf, ef, tl, el = ingest.bounds[i]
-        period = (2.0 ** tr.spec.wrap_bits) * tr.spec.quantum
         de = float(np.diff(unwrap_counter(np.asarray([ef, el]),
                                           tr.spec.wrap_bits,
                                           tr.spec.quantum))[0]) \

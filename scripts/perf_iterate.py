@@ -41,7 +41,8 @@ CELLS = {
 }
 
 SNIPPET = """
-import json, sys
+import json
+import sys
 from repro.launch.dryrun import lower_cell
 rec, compiled = lower_cell({arch!r}, {shape!r}, multi_pod=False)
 rec.pop("traceback", None)

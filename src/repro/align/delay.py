@@ -42,6 +42,10 @@ def peak_to_delay(scores, step: float, max_lag: int) -> DelayEstimate:
     3-point parabolic refinement around the argmax; at the bank's edge
     (peak truncated) the raw argmax is kept.  Shared by the device path
     and the float64 host mirror so the two differ only in score rounding.
+    A distributed tracker that wants to combine evidence across
+    participants reduces the raw pre-refine scores (``delay_scores``)
+    or the (lag, weight) pairs read off them — never the refined
+    seconds; see ``repro.distributed.multihost``.
     """
     s = np.asarray(scores, np.float64)
     rows = np.arange(s.shape[0])
@@ -95,22 +99,47 @@ def _cached_refbank(ref: np.ndarray, max_lag: int, dtype):
     return bank
 
 
-def estimate_delays(values, mask, ref, *, step: float, max_lag: int,
-                    interpret=None, use_kernel: bool = True) \
-        -> DelayEstimate:
-    """Delay of every co-gridded stream against one reference.
+def delay_scores(values, mask, ref, *, max_lag: int, interpret=None,
+                 use_kernel: bool = True,
+                 block_rows: int = None) -> np.ndarray:
+    """Raw (K, L) lag-bank correlations BEFORE the parabolic refine.
 
-    values/mask: (K, G) from ``regrid_rows``; ref: (G,) reference signal
-    on the same grid; step: the grid step (seconds); max_lag: half-width
-    of the search window in grid steps.
+    This is the reducible quantity of the delay estimator: scores (and
+    the (argmax lag, peak correlation) pairs read off them) are per-row
+    linear evidence, while the parabolic refine in ``peak_to_delay`` is
+    nonlinear — a multi-host tracker therefore exchanges these (or the
+    derived (lag, weight) pairs) and refines after the reduce.
+
+    ``block_rows`` pins the kernel's row tiling: the lag bank is the one
+    matmul on the tracking path whose compiled/interpreted blocking
+    would otherwise depend on HOW MANY rows are scored together, so a
+    partition-invariant tracker (``fleet.pipeline.AlignTrackStage``)
+    passes the fleet row tile (8) to make every row's score bit-identical
+    however the fleet is split across hosts.
     """
     import jax.numpy as jnp
     interpret = auto_interpret(interpret)
     v = jnp.asarray(values)
     bank = _cached_refbank(np.asarray(ref), max_lag, v.dtype)
     scores = xcorr_scores(v, jnp.asarray(mask, v.dtype), bank,
-                          interpret=interpret, use_kernel=use_kernel)
-    return peak_to_delay(np.asarray(scores), step, max_lag)
+                          interpret=interpret, use_kernel=use_kernel,
+                          block_rows=block_rows)
+    return np.asarray(scores)
+
+
+def estimate_delays(values, mask, ref, *, step: float, max_lag: int,
+                    interpret=None, use_kernel: bool = True,
+                    block_rows: int = None) -> DelayEstimate:
+    """Delay of every co-gridded stream against one reference.
+
+    values/mask: (K, G) from ``regrid_rows``; ref: (G,) reference signal
+    on the same grid; step: the grid step (seconds); max_lag: half-width
+    of the search window in grid steps.
+    """
+    scores = delay_scores(values, mask, ref, max_lag=max_lag,
+                          interpret=interpret, use_kernel=use_kernel,
+                          block_rows=block_rows)
+    return peak_to_delay(scores, step, max_lag)
 
 
 def make_refbank_host(ref, *, max_lag: int) -> np.ndarray:

@@ -373,9 +373,9 @@ def _xcorr_np(xc, refc, max_lag):
     lags = np.arange(-max_lag, max_lag + 1)
     num = np.empty(len(lags))
     den_r = np.empty(len(lags))
-    for i, l in enumerate(lags):
-        a, b = (xc[l:], refc[:g - l]) if l >= 0 else (xc[:g + l],
-                                                      refc[-l:])
+    for i, lag in enumerate(lags):
+        a, b = (xc[lag:], refc[:g - lag]) if lag >= 0 \
+            else (xc[:g + lag], refc[-lag:])
         num[i] = a @ b
         den_r[i] = b @ b
     den_x = np.sqrt((xc * xc).sum())

@@ -55,13 +55,14 @@ def reduced(cfg: ArchConfig) -> ArchConfig:
     Keeps the block pattern, attention options, MoE/hybrid structure;
     shrinks depth/width/experts/vocab so one forward+train step runs on CPU.
     """
-    n_layers = max(2, 2 * len(cfg.block_pattern)) if len(cfg.block_pattern) > 1 \
-        else 2
+    n_layers = (max(2, 2 * len(cfg.block_pattern))
+                if len(cfg.block_pattern) > 1 else 2)
     moe = None
     if cfg.moe is not None:
         moe = dataclasses.replace(
             cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
-            expert_d_ff=32, num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            expert_d_ff=32,
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
         )
     kv = min(cfg.num_kv_heads, 2)
     heads = max(4, (4 // kv) * kv)   # keep heads % kv == 0
@@ -86,5 +87,7 @@ def reduced(cfg: ArchConfig) -> ArchConfig:
 
 
 SMOKE_SHAPE = ShapeConfig("smoke", seq_len=16, global_batch=2, kind="train")
-SMOKE_DECODE = ShapeConfig("smoke_decode", seq_len=32, global_batch=2, kind="decode")
-SMOKE_PREFILL = ShapeConfig("smoke_prefill", seq_len=16, global_batch=2, kind="prefill")
+SMOKE_DECODE = ShapeConfig("smoke_decode", seq_len=32, global_batch=2,
+                           kind="decode")
+SMOKE_PREFILL = ShapeConfig("smoke_prefill", seq_len=16, global_batch=2,
+                            kind="prefill")

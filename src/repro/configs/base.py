@@ -1,9 +1,10 @@
 """Architecture + run-shape configuration system.
 
-Every assigned architecture is a :class:`ArchConfig` instance registered under its
-public id (``--arch <id>``).  Shapes (the four assigned input-shape regimes) are
-:class:`ShapeConfig` instances.  A (arch, shape) pair fully determines the lowered
-program: ``train_step`` for ``train_*`` shapes, ``serve_step`` for ``decode_*`` /
+Every assigned architecture is a :class:`ArchConfig` instance registered
+under its public id (``--arch <id>``).  Shapes (the four assigned
+input-shape regimes) are :class:`ShapeConfig` instances.  A (arch, shape)
+pair fully determines the lowered program: ``train_step`` for ``train_*``
+shapes, ``serve_step`` for ``decode_*`` /
 ``long_*`` shapes, ``prefill`` for ``prefill_*``.
 """
 from __future__ import annotations
@@ -58,7 +59,7 @@ class ArchConfig:
     block_pattern: tuple = (ATTN,)
     # --- MoE ---------------------------------------------------------------
     moe: Optional[MoEConfig] = None
-    moe_every: int = 1              # apply MoE FFN on layers where i % moe_every == 0
+    moe_every: int = 1          # MoE FFN on layers with i % moe_every == 0
     # --- mamba -------------------------------------------------------------
     mamba_d_state: int = 16
     mamba_d_conv: int = 4
@@ -135,10 +136,12 @@ class ArchConfig:
                     total += 3 * d * self.d_ff              # swiglu
         if self.encoder_layers:
             total += self.encoder_layers * (
-                2 * d + d * (nq * h) * 2 + 2 * d * (nkv * h) + 4 * d * self.d_ff
+                2 * d + d * (nq * h) * 2 + 2 * d * (nkv * h)
+                + 4 * d * self.d_ff
             )
             # decoder cross-attention
-            total += self.num_layers * (d * (nq * h) * 2 + 2 * d * (nkv * h) + d)
+            total += self.num_layers * (d * (nq * h) * 2
+                                        + 2 * d * (nkv * h) + d)
         return int(total)
 
     def active_param_count(self) -> int:

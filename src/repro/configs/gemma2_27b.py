@@ -1,4 +1,5 @@
-"""gemma2-27b — local+global alternating attention, logit softcap [arXiv:2408.00118; hf]."""
+"""gemma2-27b — local+global alternating attention, logit softcap
+[arXiv:2408.00118; hf]."""
 from repro.configs.base import ArchConfig, ATTN, ATTN_LOCAL
 
 CONFIG = ArchConfig(

@@ -1,4 +1,5 @@
-"""jamba-1.5-large-398b — Mamba+attention 1:7 interleave with 16-expert top-2 MoE
+"""jamba-1.5-large-398b — Mamba+attention 1:7 interleave with 16-expert
+top-2 MoE
 [arXiv:2403.19887; hf:ai21labs/AI21-Jamba-1.5-Large].
 
 Hybrid/sub-quadratic: the only dense-KV layers are the 9 attention layers

@@ -1,4 +1,5 @@
-"""llama3.2-3b — small llama3 dense GQA [hf:meta-llama/Llama-3.2-3B; unverified]."""
+"""llama3.2-3b — small llama3 dense GQA
+[hf:meta-llama/Llama-3.2-3B; unverified]."""
 from repro.configs.base import ArchConfig, ATTN
 
 CONFIG = ArchConfig(

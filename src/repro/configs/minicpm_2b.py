@@ -1,4 +1,4 @@
-"""minicpm-2b — llama-like dense; trained with the WSD schedule [arXiv:2404.06395; hf].
+"""minicpm-2b — llama-like dense; WSD schedule [arXiv:2404.06395; hf].
 
 The WSD (warmup-stable-decay) schedule is implemented in
 ``repro.train.optimizer.wsd_schedule`` and is this arch's default.

@@ -1,6 +1,8 @@
-"""qwen2-vl-2b — VLM backbone (M-RoPE, dynamic resolution) [arXiv:2409.12191; hf].
+"""qwen2-vl-2b — VLM backbone (M-RoPE, dynamic resolution)
+[arXiv:2409.12191; hf].
 
-The transformer BACKBONE only; the vision frontend is a stub — ``input_specs()``
+The transformer BACKBONE only; the vision frontend is a stub —
+``input_specs()``
 provides precomputed patch embeddings merged into the token stream.
 """
 from repro.configs.base import ArchConfig, ATTN

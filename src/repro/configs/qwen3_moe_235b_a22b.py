@@ -1,4 +1,5 @@
-"""qwen3-moe-235b-a22b — 128 experts top-8 MoE [hf:Qwen/Qwen3-235B-A22B; hf]."""
+"""qwen3-moe-235b-a22b — 128 experts top-8 MoE
+[hf:Qwen/Qwen3-235B-A22B; hf]."""
 from repro.configs.base import ArchConfig, MoEConfig, ATTN
 
 CONFIG = ArchConfig(

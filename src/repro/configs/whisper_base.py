@@ -1,4 +1,5 @@
-"""whisper-base — encoder-decoder, conv frontend (STUB) [arXiv:2212.04356; unverified].
+"""whisper-base — encoder-decoder, conv frontend (STUB)
+[arXiv:2212.04356; unverified].
 
 ``input_specs()`` supplies precomputed log-mel frame embeddings (the conv stem
 output), per the assignment: modality frontends are stubs.
@@ -15,7 +16,7 @@ CONFIG = ArchConfig(
     num_kv_heads=8,
     d_ff=2048,
     vocab_size=51_865,
-    rope_theta=10_000.0,     # (whisper uses learned/sinusoidal; rope harmless here)
+    rope_theta=10_000.0,    # (whisper: learned/sinusoidal; rope harmless)
     block_pattern=(ATTN,),
     num_audio_frames=1500,
     source="arXiv:2212.04356; hf:openai/whisper-base",

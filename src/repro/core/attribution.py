@@ -22,8 +22,9 @@ import numpy as np
 from repro.core.calibration import apply_corrections
 from repro.core.characterization import StepResponse
 from repro.core.confidence import SteadyStateStats, steady_state
-from repro.core.reconstruction import (PowerSeries, delta_e_over_delta_t,
-                                       power_trace_series, unwrap_counter)
+from repro.core.reconstruction import (delta_e_over_delta_t,
+                                       power_trace_series,
+                                       unwrap_counter)
 from repro.core.sensors import SensorTrace
 
 
@@ -105,7 +106,8 @@ def attribute_energy_many(traces, phases, *, corrections=None,
 
 def attribute_power_series(trace: SensorTrace, phases,
                            *, corrections=None) -> dict:
-    """Reconstructed (ΔE/Δt) power per phase — for stacked plots (Fig. 7/8)."""
+    """Reconstructed (ΔE/Δt) power per phase — stacked plots
+    (Fig. 7/8)."""
     trace = apply_corrections(trace, corrections)
     series = (delta_e_over_delta_t(trace) if trace.spec.is_cumulative
               else power_trace_series(trace))
@@ -118,7 +120,8 @@ def attribute_power_series(trace: SensorTrace, phases,
 
 
 def energy_conservation_residual(trace: SensorTrace, phases) -> float:
-    """|Σ phase ΔE + Σ gap ΔE − total ΔE| / total ΔE over the phase span."""
+    """|Σ phase ΔE + Σ gap ΔE − total ΔE| / total ΔE over the phase
+    span."""
     spans = sorted([(a, b) for _, a, b in phases])
     t_lo, t_hi = spans[0][0], max(b for _, b in spans)
     segs = []

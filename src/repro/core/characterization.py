@@ -1,4 +1,5 @@
-"""Blind sensor characterization from square-wave observations (§III-A1, §V-A).
+"""Blind sensor characterization from square-wave observations
+(§III-A1, §V-A).
 
 Given only a SensorTrace (what a practitioner sees) and the workload's known
 phase schedule (which the practitioner controls), estimate:

@@ -15,7 +15,6 @@ test-recoverable parameter of :class:`SensorSpec`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 # Simulated hardware constants for the TPU-v5e-like node (DESIGN.md §2).
 # The paper's equivalents: MI250X TDP 560 W / MI300A cap 550 W; Cray PM

@@ -9,7 +9,8 @@ Two sources of truth:
 The occupancy model (documented, configurable): at the bottleneck time T =
 max(terms), each unit's duty cycle is term/T, and chip power is
 
-    P = P_idle + (P_tdp − P_idle) · clip(w_mxu·c + w_hbm·m + w_ici·x, 0, 1)
+    P = P_idle + (P_tdp − P_idle)
+        · clip(w_mxu·c + w_hbm·m + w_ici·x, 0, 1)
 
 with weights reflecting that MXU switching dominates dynamic power, HBM
 second, serdes last — mirroring how the paper's square-wave FMA kernel

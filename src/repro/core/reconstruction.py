@@ -12,7 +12,8 @@ Correctness details the paper depends on, all handled here:
   * quantization noise: ΔE has ±1 quantum noise -> power noise
     quantum/Δt; optional ``min_dt`` coalescing bounds it.
 
-Host (numpy) implementation — the oracle for ``repro.kernels.power_reconstruct``
+Host (numpy) implementation — the oracle for
+``repro.kernels.power_reconstruct``
 which does the same at (nodes × devices × samples) scale on TPU.
 """
 from __future__ import annotations
@@ -101,7 +102,8 @@ def invert_moving_average(series: PowerSeries, window_s) -> PowerSeries:
     """Exact inversion of a boxcar moving average on a uniform grid.
 
     If y_t = mean(x over [t-w, t]) on a grid of step h with k = w/h samples,
-    then x_t = k·y_t − k·y_{t−1} + x_{t−k}.  Useful to undo vendor filtering
+    then x_t = k·y_t − k·y_{t−1} + x_{t−k}.  Useful to undo vendor
+    filtering
     when only the averaged power field is exposed (beyond-paper extra).
     """
     h = np.median(np.diff(series.t))

@@ -15,8 +15,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.measurement_model import (CHIP_IDLE_W, DDR_W, HOST_CPU_W,
-                                          NIC_W, SensorSpec, ToolSpec,
+from repro.core.measurement_model import (DDR_W, HOST_CPU_W, NIC_W,
+                                          SensorSpec, ToolSpec,
                                           default_node_sensors)
 from repro.core.power_model import PiecewisePower
 

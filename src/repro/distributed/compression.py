@@ -14,7 +14,6 @@ compression happens before XLA's implicit reduce.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

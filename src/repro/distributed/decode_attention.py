@@ -9,7 +9,6 @@ cross shards.  This is the TPU-native analogue of FlashDecoding's split-K.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
@@ -28,9 +27,10 @@ def _partial_attend(q, k, v, valid):
     m = jnp.max(scores, axis=-1)                       # (B,Hkv,g)
     p = jnp.exp(scores - m[..., None])
     p = jnp.where(valid[:, None, None, :], p, 0.0)
-    l = jnp.sum(p, axis=-1)
+    lsum = jnp.sum(p, axis=-1)
     num = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
-    return (num.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
+    return (num.reshape(b, hq, d), m.reshape(b, hq),
+            lsum.reshape(b, hq))
 
 
 def decode_attention(q, ck, cv, pos, mesh, *, window=0, logit_cap=0.0,
@@ -78,18 +78,18 @@ def decode_attention(q, ck, cv, pos, mesh, *, window=0, logit_cap=0.0,
             m = jnp.max(scores, axis=-1)
             p = jnp.where(valid[:, None, None, :],
                           jnp.exp(scores - m[..., None]), 0.0)
-            l = jnp.sum(p, axis=-1)
+            lsum = jnp.sum(p, axis=-1)
             num = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
-            num, m, l = (num.reshape(bq, hq, d), m.reshape(bq, hq),
-                         l.reshape(bq, hq))
+            num, m, lsum = (num.reshape(bq, hq, d), m.reshape(bq, hq),
+                            lsum.reshape(bq, hq))
         else:
-            num, m, l = _partial_attend(q3, k, v, valid)
+            num, m, lsum = _partial_attend(q3, k, v, valid)
         if seq_ok and n_shards > 1:
             m_g = lax.pmax(m, seq_axis)
             scale = jnp.exp(m - m_g)
             num = lax.psum(num * scale[..., None], seq_axis)
-            l = lax.psum(l * scale, seq_axis)
-        out = num / jnp.maximum(l[..., None], 1e-30)
+            lsum = lax.psum(lsum * scale, seq_axis)
+        out = num / jnp.maximum(lsum[..., None], 1e-30)
         return out[:, None].astype(qq.dtype)
 
     if not seq_ok:

@@ -9,12 +9,15 @@ subsystem's row partition over ``jax.distributed`` processes:
     ``HostShard`` metadata),
   * the per-host streaming pipeline runs unchanged — every kernel is
     row-local, so the heavy work needs no cross-process XLA at all,
-  * the two quantities that ARE global go over ``HostCollectives``:
-    the emit frontier (all-reduced min every window, so hosts emit
-    identical grid slots in lockstep) and the end-of-run
-    per-(device, phase, coverage-pattern, stream) integrals + fusion
-    sufficient statistics (gathered once, assembled identically on
-    every host).
+  * the quantities that ARE global go over ``HostCollectives``: the
+    emit frontier (all-reduced min every window, so hosts emit
+    identical grid slots in lockstep), the ONLINE delay-tracking state
+    (ring origin + fill frontier mins, plus each hop window's
+    (lag, weight) pairs framed onto the emit-frontier reduce and
+    folded into one shared fleet EMA — every host applies identical
+    delay corrections), and the end-of-run per-(device, phase,
+    coverage-pattern, stream) integrals + fusion sufficient statistics
+    (gathered once, assembled identically on every host).
 
 ``HostCollectives`` is deliberately NOT an XLA collective: the reduced
 quantities are a few hundred bytes of host-side float64 per step, and
@@ -29,9 +32,13 @@ runs; ``global_fleet_mesh`` additionally exposes the
 (hosts, local_devices) mesh for placement of fleet-wide arrays there.
 
 Determinism contract: whole device groups live on one host, frontier
-all-reduce pins the emission schedule, and the end-of-run merge is pure
-placement — fleet-wide fused energies are bit-identical for ANY
-host←group assignment and ANY process count (tested at 1/2/4).
+all-reduce pins the emission schedule, the end-of-run merge is pure
+placement, and the tracking reduce follows the fold-order rule
+(``allreduce_framed``: left fold in process-id order; exclusive row
+ownership makes the sums exact) with the lag-bank row tiling pinned to
+the fleet row tile — fleet-wide fused energies are bit-identical for
+ANY host←group assignment and ANY process count (tested at 1/2/4,
+fixed-delay AND tracked).
 """
 from __future__ import annotations
 
@@ -89,6 +96,40 @@ class HostCollectives:
 
     def allreduce_sum(self, x: float) -> float:
         return float(self.allreduce([float(x)], "sum")[0])
+
+    def allreduce_framed(self, scalar: float, vec, *,
+                         scalar_op: str = "min"):
+        """One round-trip framed reduce: a scalar plus a float64 vector.
+
+        The frame rides a single ``allgather_bytes`` — this is how the
+        per-window (lag, weight) tracking contributions piggyback on the
+        emit-frontier reduction instead of costing their own round trip.
+        The scalar is min/max-reduced; the vector is summed as a LEFT
+        FOLD IN PROCESS-ID ORDER (the fold-order determinism rule:
+        every participant accumulates ``v_0 + v_1 + ... + v_{P-1}`` in
+        the same sequence, so all hosts compute bit-identical sums; and
+        when each element is non-zero on exactly ONE participant — e.g.
+        per-row lag contributions under exclusive row ownership — the
+        float64 sum is EXACT, hence also invariant to the process
+        count).  Returns ``(scalar, vec)``.
+        """
+        assert scalar_op in ("min", "max"), scalar_op
+        v = np.asarray(vec, np.float64).reshape(-1)
+        if self.num_processes == 1:
+            return float(scalar), v.copy()
+        payload = np.concatenate([[float(scalar)], v])
+        parts = self.allgather_bytes(payload.tobytes())
+        rows = [np.frombuffer(p, np.float64) for p in parts]
+        assert all(len(r) == len(payload) for r in rows), \
+            "framed reduce: ragged frames (participants disagree on " \
+            "the tracked fleet width?)"
+        s = rows[0][0]
+        acc = rows[0][1:].copy()
+        red = min if scalar_op == "min" else max
+        for r in rows[1:]:
+            s = red(s, float(r[0]))
+            acc += r[1:]
+        return float(s), acc
 
 
 class CoordinatorCollectives(HostCollectives):
@@ -292,9 +333,15 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
 
     ``delays`` are per-LOCAL-row fixed delays (this host's rows);
     ``grid``/``phases`` are global (identical on every host).
-    ``track=True`` re-estimates delays online per host — tracking state
-    never crosses hosts, so tracked runs match batch only approximately
-    (exactly like the single-host online mode).
+    ``track=True`` re-estimates delays online and SYNCHRONIZES the
+    tracking state over the collectives: the tracker's ring origin and
+    fill frontier are all-reduced (the hop schedule is global) and each
+    window's (lag, weight) pairs ride the emit-frontier frame
+    (``allreduce_framed``), folding into one shared fleet EMA — so a
+    tracked multi-host run reproduces the single-host tracker's delay
+    corrections exactly, and stays bit-identical for any host←group
+    assignment and process count just like the fixed-delay mode
+    (``pipe.fleet_delays()`` exposes the shared vector).
     """
     from repro.core.attribution import PhaseEnergy
     from repro.fleet.pipeline import (StreamingFusedPipeline,

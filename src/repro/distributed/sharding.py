@@ -9,7 +9,8 @@ Policy (DESIGN.md §4):
   * DP ("pod","data"): activation batch; gradients all-reduced (pod axis
     crosses DCN once per step).
   * FSDP ("data"): the *embed* (d_model) dim of every 2-D+ weight for archs
-    over ``fsdp_threshold`` params — ZeRO-3-style gather-per-layer under scan.
+    over ``fsdp_threshold`` params — ZeRO-3-style gather-per-layer
+    under scan.
   * Decode caches: seq dim on "model" (small tensors cross shards during
     attention: score partials, not the cache), batch on DP when divisible.
 """
@@ -19,7 +20,6 @@ import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 FSDP_THRESHOLD = 500_000_000   # params; above this, shard "embed" on data

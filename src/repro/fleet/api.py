@@ -94,7 +94,12 @@ def attribute_energy_fused(trace_groups, phases, *, streaming=False,
     ``shard``+``collectives`` (streaming only) span the fleet across
     ``jax.distributed`` processes: ``trace_groups`` are then this
     host's LOCAL device groups in ``shard.group_ids`` order, and every
-    host returns the same fleet-wide result — see
+    host returns the same fleet-wide result.  Online delay tracking
+    (``track=True``, the default when no fixed ``delays`` are given)
+    is synchronized over the collectives — shared ring schedule, one
+    fleet-wide (lag, weight) EMA — so tracked multi-host runs match
+    the single-host tracker and stay bit-identical across process
+    counts, exactly like the fixed-delay mode — see
     ``repro.distributed.multihost``.
     """
     if kw.get("collectives") is not None:

@@ -519,14 +519,39 @@ class AlignTrackStage:
     biases every window's sub-sample peak by up to half a step —
     measured -0.25 ms at step 0.500 ms on a 1 ms sensor vs -0.03 ms at
     the measured-cadence 0.506 ms.
+
+    Multi-host (``collectives`` + ``shard``): the tracker becomes
+    shard-aware — the ring ORIGIN and the per-update fill frontier are
+    all-reduced (min), so every host fills identical global grid slots
+    and hits the hop boundaries in lockstep; each host scores only its
+    own rows (the lag bank is row-local once the tiling is pinned — see
+    below), folds its rows' lags into the local EMA exactly as the
+    single-host tracker would, and hands the per-window (lag, weight)
+    pairs to ``RegridFuseStage``, which sums them across hosts inside
+    its existing frontier round-trip and folds the fleet-wide vector
+    into the shared ``delay_fleet_s`` EMA — every host therefore holds
+    (and applies, for its rows) IDENTICAL delay corrections.  Three
+    rules make this bit-stable for any host<-group assignment and any
+    process count (the determinism contract of
+    ``repro.distributed.multihost``):
+
+      1. the xcorr row tiling is pinned to the fleet row tile
+         (``ROW_ALIGN``), so a row's score never depends on how many
+         other rows the host happens to score with it;
+      2. the (lag, weight) sum is a left fold in process-id order, and
+         exclusive row ownership makes it EXACT (each element is
+         non-zero on one host only);
+      3. origin/frontier mins are float64 all-reduces of identical
+         per-row inputs — min is exact.
     """
 
     def __init__(self, n_streams: int, *, grid_step: float,
                  reference=None, groups=None, window: int = 2048,
                  hop: int = 512, max_lag: int = 64, ema: float = 0.5,
                  min_corr: float = 0.2, min_fill: int = None,
-                 tail: int = 256, delay0=None, interpret=None,
-                 use_kernel: bool = True, host: bool = False):
+                 tail: int = 256, delay0=None, collectives=None,
+                 shard=None, interpret=None, use_kernel: bool = True,
+                 host: bool = False):
         assert reference is not None or groups is not None, \
             "AlignTrack needs a reference schedule or group structure"
         self.n_streams = n_streams
@@ -540,6 +565,20 @@ class AlignTrackStage:
         self.min_corr = float(min_corr)
         self.min_fill = (self.window // 2 if min_fill is None
                          else int(min_fill))
+        self.collectives = collectives
+        self.shard = shard
+        if collectives is not None:
+            assert shard is not None, \
+                "synchronized tracking needs the HostShard (global " \
+                "row ids place this host's lags in the fleet vector)"
+            assert not host and use_kernel is not False, \
+                "synchronized tracking requires the kernel scorer — " \
+                "the host mirror's / jnp reference's full-fleet " \
+                "matmul ignores the pinned row tile and is not " \
+                "partition-invariant"
+            assert self.min_corr > 0.0, \
+                "synchronized tracking needs min_corr > 0 (the zero " \
+                "frames of hop-less windows must never pass the gate)"
         self.interpret = auto_interpret(interpret)
         self.use_kernel = use_kernel
         self.host = host
@@ -549,11 +588,17 @@ class AlignTrackStage:
         self.origin = None
         self.carry: AlignCarry = None
         self.history: list = []
+        self._pending = None
+        self.delay_fleet = None    # (n_global,) shared EMA (synced mode)
+        self._seen_fleet = None
 
     def reset(self):
         self.origin = None
         self.carry = None
         self.history = []
+        self._pending = None
+        self.delay_fleet = None
+        self._seen_fleet = None
         self._tail.reset()
         return self
 
@@ -564,13 +609,39 @@ class AlignTrackStage:
             raise RuntimeError("AlignTrack has seen no data yet")
         return self.carry.delay
 
+    @property
+    def synced(self) -> bool:
+        """True when tracking state is shared over HostCollectives."""
+        return self.collectives is not None
+
+    @property
+    def fleet_delay_s(self) -> np.ndarray:
+        """(n_global,) fleet-wide tracked delays — identical on every
+        host (synced mode only)."""
+        assert self.synced, "fleet_delay_s needs collectives"
+        if self.delay_fleet is None:
+            raise RuntimeError("AlignTrack has seen no data yet")
+        return self.delay_fleet.copy()
+
     def _init(self, chunk: ClosedWindow):
         f = chunk.times.shape[0]
         n = self.n_streams
-        self.origin = float(chunk.times[:n, 0].astype(np.float64).min())
+        origin = float(chunk.times[:n, 0].astype(np.float64).min())
         delay = np.zeros((f,), np.float64)
         if len(self._delay0):
             delay[:len(self._delay0)] = self._delay0
+        if self.synced:
+            # shared ring origin: every host fills the SAME global grid
+            # slots, so hop boundaries (and hence every estimate's
+            # window) land in lockstep fleet-wide
+            n_global = int(self.shard.row_offsets[-1])
+            seed = np.zeros((n_global,))
+            seed[self.shard.row_ids] = delay[:n]
+            origin, seed = self.collectives.allreduce_framed(
+                origin, seed, scalar_op="min")
+            self.delay_fleet = seed
+            self._seen_fleet = np.zeros((n_global,), bool)
+        self.origin = origin
         self.carry = AlignCarry(
             ring_v=np.zeros((f, self.window), chunk.values.dtype),
             ring_m=np.zeros((f, self.window), bool),
@@ -584,6 +655,10 @@ class AlignTrackStage:
         n = self.n_streams
         rows_t, rows_v = self._tail.augmented(chunk)
         frontier = float(chunk.times[:n, -1].astype(np.float64).min())
+        if self.synced:
+            # fill to the globally slowest stream: the ring advances —
+            # and the hop re-estimates fire — identically on every host
+            frontier = self.collectives.allreduce_min(frontier)
         hi = int(np.floor((frontier - self.origin) / self.step - 0.01))
         if hi >= c.next_slot:
             idx = np.arange(c.next_slot, hi + 1)
@@ -630,10 +705,15 @@ class AlignTrackStage:
                 return estimate_delays_host(vals.astype(np.float64),
                                             mask, ref, step=self.step,
                                             max_lag=self.max_lag)
+            # the row tile is PINNED (ROW_ALIGN) so each row's score is
+            # bit-identical however many rows this host scores with it
+            # — the partition-invariance rule the multi-host tracker
+            # depends on (harmless single-host)
             return estimate_delays(vals, mask.astype(vals.dtype), ref,
                                    step=self.step, max_lag=self.max_lag,
                                    interpret=self.interpret,
-                                   use_kernel=uk)
+                                   use_kernel=uk,
+                                   block_rows=ROW_ALIGN)
 
         if self.reference is not None:
             ref = np.asarray(self.reference(times64), np.float64)
@@ -652,11 +732,46 @@ class AlignTrackStage:
         a = np.where(c.seen, self.ema, 1.0)   # first estimate: direct
         c.delay = np.where(good, (1 - a) * c.delay + a * raw, c.delay)
         c.seen = c.seen | good
+        if self.synced:
+            # queue this window's (lag, weight) pairs for the framed
+            # reduce that rides RegridFuse's next frontier round-trip
+            self._pending = (raw[:n].copy(), peak[:n].copy())
         self.history.append(DelayTrackPoint(
             t_lo=float(times64[0]), t_hi=float(times64[-1]),
             t_center=float(0.5 * (times64[0] + times64[-1])),
             raw=raw[:n].copy(), ema=c.delay[:n].copy(),
             peak=peak[:n].copy()))
+
+    def pending_contribution(self) -> np.ndarray:
+        """(2, n_global) framed (lag, weight) contribution — this host's
+        rows' raw per-window lags and peak correlations since the last
+        fold, zeros elsewhere (and all-zero when no hop fired: the
+        zero weights fail the ``min_corr`` gate on every host, so a
+        hop-less frame folds nothing).  Consumed by ``fold_fleet`` after
+        ``RegridFuseStage`` sums it across hosts."""
+        assert self.synced
+        n_global = len(self.delay_fleet)
+        out = np.zeros((2, n_global))
+        if self._pending is not None:
+            raw, peak = self._pending
+            out[0, self.shard.row_ids] = raw
+            out[1, self.shard.row_ids] = peak
+            self._pending = None
+        return out
+
+    def fold_fleet(self, reduced: np.ndarray):
+        """Fold the cross-host-summed (lag, weight) vectors into the
+        shared fleet EMA — the SAME gate/fold arithmetic as the local
+        ``_estimate``, applied to bit-identical inputs (exclusive row
+        ownership makes the sums exact), so ``delay_fleet`` stays
+        bitwise consistent with every owner's local ``delay`` carry."""
+        assert self.synced
+        raw, peak = np.asarray(reduced, np.float64).reshape(2, -1)
+        good = peak >= self.min_corr
+        a = np.where(self._seen_fleet, self.ema, 1.0)
+        self.delay_fleet = np.where(
+            good, (1 - a) * self.delay_fleet + a * raw, self.delay_fleet)
+        self._seen_fleet = self._seen_fleet | good
 
 
 # ---------------------------------------------------------------------------
@@ -699,9 +814,13 @@ class RegridFuseStage:
     bit-stable under ANY host←row assignment — a host must therefore
     drive its stage through the same number of ``update``/``flush``
     calls as every other host (time-aligned replay windows over the
-    all-reduced global span do exactly this).  ``record=True`` keeps
-    every emitted window in ``self.emitted`` (test/diagnostic use:
-    memory grows with the run).
+    all-reduced global span do exactly this).  When a SYNCED
+    ``AlignTrackStage`` feeds the delays, its per-window (lag, weight)
+    contributions ride this same frontier round-trip as one framed
+    all-reduce (``allreduce_framed``) — no extra round trip — and the
+    fleet-wide fold lands before the emission that uses the frontier.
+    ``record=True`` keeps every emitted window in ``self.emitted``
+    (test/diagnostic use: memory grows with the run).
     """
 
     def __init__(self, group_sizes, *, grid_origin: float,
@@ -747,6 +866,20 @@ class RegridFuseStage:
             d[:self.n_streams] = self._fixed
         return d
 
+    def _sync(self, value: float, op: str) -> float:
+        """Frontier all-reduce; a synced tracker's pending (lag,
+        weight) vectors piggyback on the same frame and are folded into
+        the shared fleet EMA before the value is used."""
+        al = self.align
+        if al is not None and al.synced:
+            pend = al.pending_contribution()
+            value, summed = self.collectives.allreduce_framed(
+                value, pend.ravel(), scalar_op=op)
+            al.fold_fleet(summed.reshape(2, -1))
+            return value
+        return (self.collectives.allreduce_min(value) if op == "min"
+                else self.collectives.allreduce_max(value))
+
     def _emit(self, rows_t, rows_v, t_first, delays, lo: int, hi: int):
         idx = np.arange(lo, hi + 1)
         grid64 = self.origin + self.step * idx
@@ -786,8 +919,9 @@ class RegridFuseStage:
             # emit-frontier all-reduce: every host trails the globally
             # slowest stream and emits identical slot windows (see class
             # docstring: this is what makes the fleet-wide accumulation
-            # order — and hence the fused energies — assignment-stable)
-            frontier = self.collectives.allreduce_min(frontier)
+            # order — and hence the fused energies — assignment-stable);
+            # a synced tracker's (lag, weight) pairs ride the same frame
+            frontier = self._sync(frontier, "min")
         # a safety margin of 1% of a step keeps float32-rounded queries
         # strictly inside every row's closed span (re-emitted exactly at
         # flush time where the span bound is final)
@@ -818,7 +952,14 @@ class RegridFuseStage:
             if self.collectives is not None:
                 # cover through the globally LAST row (hosts whose rows
                 # end early mask off, exactly as in the batch regrid)
-                t_end = self.collectives.allreduce_max(t_end)
+                t_end = self._sync(t_end, "max")
+        elif (self.collectives is not None and self.align is not None
+              and self.align.synced):
+            # explicit t_end (identical on every host): the reduce is a
+            # scalar no-op but still flushes any (lag, weight) pairs a
+            # final-window hop left pending, keeping the shared fleet
+            # EMA current — and identical — on every host
+            t_end = self._sync(float(t_end), "max")
         hi = int(np.floor((t_end - self.origin) / self.step + 1e-9))
         if hi < self.carry.next_slot:
             return None
@@ -1446,6 +1587,7 @@ class StreamingFusedPipeline:
                 groups=None if reference is not None else self.group_sizes,
                 window=window, hop=hop, max_lag=max_lag, ema=ema,
                 min_corr=min_corr, tail=tail, delay0=delays,
+                collectives=collectives, shard=shard,
                 interpret=interpret, use_kernel=use_kernel, host=host)
         self.fuse = RegridFuseStage(
             self.group_sizes, grid_origin=grid_origin,
@@ -1534,6 +1676,14 @@ class StreamingFusedPipeline:
         d = np.zeros((self.n_rows,))
         d[:self.n_streams] = self.fuse._fixed
         return d[:self.n_streams]
+
+    def fleet_delays(self):
+        """(n_global,) fleet-wide tracked delays, identical on every
+        host (multi-host tracking mode; None otherwise)."""
+        if self.align is not None and self.align.synced \
+                and self.align.delay_fleet is not None:
+            return self.align.fleet_delay_s
+        return None
 
     @property
     def delay_history(self) -> list:

@@ -35,7 +35,8 @@ import numpy as np
 from repro.fleet.pipeline import (PHASE_ALIGN,  # noqa: F401 (re-export)
                                   CounterAttributeStage, IngestStage,
                                   PhaseIntegrateStage, StreamPipeline,
-                                  pad_phases, sanitize_chunk)
+                                  pad_phases,  # noqa: F401 (re-export)
+                                  sanitize_chunk)
 
 # backwards-compatible alias (pre-pipeline internal name)
 _sanitize_chunk = sanitize_chunk

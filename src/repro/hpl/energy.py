@@ -70,8 +70,8 @@ def fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4, seed0=0,
 
 def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
                          seed0=0, sensors_per_chip=3, interpret=None,
-                         streaming=False, chunk=1024, shard=None,
-                         collectives=None):
+                         streaming=False, track=None, chunk=1024,
+                         shard=None, collectives=None):
     """Per-node phase energies from FUSED cross-sensor streams.
 
     Where ``fleet_energize`` trusts chip0's energy counter alone, this
@@ -91,8 +91,13 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
     processes: this host simulates (in production: reads) ONLY the
     nodes its ``HostShard`` assigns it — per-node seeds keep each
     node's sensor fabric identical to the single-host run — and the
-    fleet-wide result comes back on every host (see
-    ``repro.distributed.multihost``).
+    fleet-wide result comes back on every host.  Online delay tracking
+    is SYNCHRONIZED over the collectives (shared ring schedule + one
+    fleet-wide EMA), so the multi-host accounting reproduces the
+    single-host streaming tracker instead of drifting ~2% on per-host
+    rings (see ``repro.distributed.multihost``).  ``track`` pins the
+    tracking mode explicitly (default: track, since no fixed delays
+    are passed).
     """
     from repro.core.calibration import nic_rail_corrections
     shifted, truth = phases_and_truth(tracer)
@@ -121,13 +126,13 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
         return attribute_energy_fused_multihost(
             groups, shifted, shard=shard, collectives=collectives,
             reference=truth, corrections=nic_rail_corrections(),
-            chunk=chunk, interpret=interpret)
+            track=track, chunk=chunk, interpret=interpret)
     if streaming:
         from repro.fleet.pipeline import attribute_energy_fused_streaming
         return attribute_energy_fused_streaming(
             groups, shifted, reference=truth,
-            corrections=nic_rail_corrections(), chunk=chunk,
-            interpret=interpret)
+            corrections=nic_rail_corrections(), track=track,
+            chunk=chunk, interpret=interpret)
     from repro.align import attribute_energy_fused
     return attribute_energy_fused(groups, shifted, reference=truth,
                                   corrections=nic_rail_corrections(),

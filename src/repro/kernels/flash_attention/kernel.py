@@ -23,7 +23,7 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len,
     q = q_ref[...].astype(jnp.float32) * sm_scale        # (block_q, d)
 
     m = jnp.full((block_q,), NEG_INF, jnp.float32)
-    l = jnp.zeros((block_q,), jnp.float32)
+    lsum = jnp.zeros((block_q,), jnp.float32)
     acc = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
 
     q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
@@ -53,8 +53,9 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len,
         acc_new = acc_c * scale[:, None] + p @ v
         return m_new, l_new, acc_new
 
-    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m, l, acc))
-    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    m, lsum, acc = jax.lax.fori_loop(0, n_kv, body, (m, lsum, acc))
+    o_ref[...] = (acc
+                  / jnp.maximum(lsum, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
 def flash_attention_kernel(q, k, v, *, causal=True, logit_cap=0.0,

@@ -2,7 +2,8 @@
 
 Given sample-and-hold power streams (t[i] closes the interval
 (t[i-1], t[i]] holding watts[i]) and P phase windows [a_j, b_j), compute
-E[stream, phase] = Σ_i watts_i · |(t_{i-1}, t_i] ∩ [a_j, b_j)| — the inner
+E[stream, phase] = Σ_i watts_i · |(t_{i-1}, t_i] ∩ [a_j, b_j)| — the
+inner
 loop of phase-level attribution at (nodes × devices × phases) scale.
 
 Tiling: grid over (stream rows × phase blocks); the (block_rows, S) power
@@ -10,7 +11,6 @@ tile stays in VMEM across the phase block.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

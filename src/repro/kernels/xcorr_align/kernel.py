@@ -13,7 +13,6 @@ read once.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import auto_block_rows

@@ -29,14 +29,21 @@ def make_refbank(ref, *, max_lag: int):
     return jnp.where(ok, jnp.take(ref_c, jnp.clip(src, 0, g - 1)), 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "use_kernel",
+                                    "block_rows"))
 def xcorr_scores(x, m, refbank, *, interpret: bool = False,
-                 use_kernel: bool = True):
+                 use_kernel: bool = True, block_rows: int = None):
     """(F, G) streams + mask vs (L, G) bank -> (F, L) scores.
 
     Pads L to ``LAG_ALIGN`` and F to ``ROW_ALIGN`` for the kernel's
     tiling (compiled backends tile rows in blocks of 8; all-zero padding
     rows score 0 through the eps-guarded norms) and slices both back.
+    ``block_rows`` pins the kernel's row tile (otherwise interpret mode
+    scores the whole fleet in one tile) — callers that need every row's
+    score to be independent of the TOTAL row count (the multi-host
+    online tracker: each host scores only its own rows, yet all hosts
+    must reproduce the single-host bits) pass ``ROW_ALIGN``.
     """
     m = m.astype(x.dtype)
     if not use_kernel:
@@ -53,5 +60,6 @@ def xcorr_scores(x, m, refbank, *, interpret: bool = False,
         z = jnp.zeros((pad_f, x.shape[1]), x.dtype)
         x = jnp.concatenate([x, z])
         m = jnp.concatenate([m, z])
-    scores = xcorr_align_kernel(x, m, refbank, interpret=interpret)
+    scores = xcorr_align_kernel(x, m, refbank, block_rows=block_rows,
+                                interpret=interpret)
     return scores[:f, :lags]

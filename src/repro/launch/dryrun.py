@@ -1,7 +1,8 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh) cell.
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh)
+cell.
 
 For each cell this driver:
   1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
@@ -24,7 +25,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, cell_is_runnable, get_arch, get_shape

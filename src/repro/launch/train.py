@@ -13,11 +13,9 @@ Usage::
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch, reduced as reduce_cfg
 from repro.data.pipeline import DataConfig, SyntheticLM

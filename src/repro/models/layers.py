@@ -1,8 +1,10 @@
 """Shared model layers: norms, RoPE/M-RoPE, attention, SwiGLU MLP.
 
 Pure-JAX (jnp + lax) implementations designed to lower efficiently under GSPMD:
-  * attention is computed in query chunks (bounded score memory at 32k prefill),
-  * all matmuls keep a head/feature axis that the sharding rules map to "model",
+  * attention is computed in query chunks (bounded score memory at 32k
+    prefill),
+  * all matmuls keep a head/feature axis that the sharding rules map
+    to "model",
   * every function is shape-polymorphic over batch/seq and dtype-polymorphic.
 
 The Pallas kernels in ``repro.kernels`` (flash_attention, ssm_scan) are TPU
@@ -12,9 +14,6 @@ and the CPU/dry-run path.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -136,7 +135,8 @@ def _attend(q, k, v, *, causal, q_offset, window=0, logit_cap=0.0,
     group = hq // hkv
     qf = q.reshape(b, sq, hkv, group, d).astype(jnp.float32)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
-                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+                        k.astype(jnp.float32)) \
+        / jnp.sqrt(d).astype(jnp.float32)
     scores = softcap(scores, logit_cap)
     if causal:
         qpos = q_offset + jnp.arange(sq)

@@ -45,7 +45,8 @@ def _ssm_params(p, x, cfg):
     proj = x @ p["x_proj"].astype(x.dtype)
     dt_in, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
     dt = jax.nn.softplus(
-        dt_in.astype(f32) @ p["dt_proj"].astype(f32) + p["dt_bias"].astype(f32))
+        dt_in.astype(f32) @ p["dt_proj"].astype(f32)
+        + p["dt_bias"].astype(f32))
     a_mat = -jnp.exp(p["A_log"].astype(f32))          # (d_in, N), negative
     return dt, b_mat.astype(f32), c_mat.astype(f32), a_mat
 
@@ -102,7 +103,8 @@ def mamba_apply(p, cfg, x, *, ssm_state=None, conv_state=None, chunk=512):
         window = jnp.concatenate([pad, xs], axis=1)    # (B, S+dc-1, d_in)
         stacked = jnp.stack(
             [window[:, i:i + s] for i in range(dc)], axis=0)  # (dc,B,S,d_in)
-        conv = jnp.einsum("kbsc,kc->bsc", stacked, p["conv_w"].astype(dt_model))
+        conv = jnp.einsum("kbsc,kc->bsc", stacked,
+                          p["conv_w"].astype(dt_model))
         conv = conv + p["conv_b"].astype(dt_model)
         new_conv = window[:, -(dc - 1):]
     xs = jax.nn.silu(conv)

@@ -16,7 +16,6 @@ tests) the same local function runs on the full array with all experts.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +85,7 @@ def _moe_local(p, x_flat, *, moe, expert_offset, e_local, capacity,
     mine = (local_e >= 0) & (local_e < e_local)
     sort_key = jnp.where(mine, local_e, e_local)              # drops sort last
     order = jnp.argsort(sort_key, stable=True)
-    se = sort_key[order]                                      # sorted expert id
+    se = sort_key[order]                                  # sorted expert id
     counts = jnp.bincount(se, length=e_local + 1)
     starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
                               jnp.cumsum(counts)[:-1]])

@@ -2,7 +2,8 @@
 
 One :class:`Model` covers all 10 assigned architectures.  Layers are stacked
 per *pattern position* and iterated with ``lax.scan`` over pattern groups so
-the HLO stays O(pattern) instead of O(num_layers) — essential for the 94-layer
+the HLO stays O(pattern) instead of O(num_layers) — essential for the
+94-layer
 qwen3-moe and 72-layer jamba dry-runs.
 
 Interfaces (all functional, pjit-friendly):
@@ -11,9 +12,6 @@ Interfaces (all functional, pjit-friendly):
   * ``decode_step(params, batch, cache, pos) -> (logits, cache)``
 """
 from __future__ import annotations
-
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -143,13 +141,15 @@ class Model:
             if cache is not None:
                 new_cache.update(st)
         elif kind == MLSTM:
-            out, st = X.mlstm_apply(p["core"], cfg, h,
-                                    state=cache.get("mlstm") if cache else None)
+            out, st = X.mlstm_apply(
+                p["core"], cfg, h,
+                state=cache.get("mlstm") if cache else None)
             if cache is not None:
                 new_cache["mlstm"] = st
         elif kind == SLSTM:
-            out, st = X.slstm_apply(p["core"], cfg, h,
-                                    state=cache.get("slstm") if cache else None)
+            out, st = X.slstm_apply(
+                p["core"], cfg, h,
+                state=cache.get("slstm") if cache else None)
             if cache is not None:
                 new_cache["slstm"] = st
         x = x + out
@@ -162,7 +162,6 @@ class Model:
             if has_cached_cross and enc_out is None:
                 ck = cache["cross_k"]
             if ck is None:
-                nkv_h = cfg.num_kv_heads * cfg.resolved_head_dim
                 b, f, _ = enc_out.shape
                 ck = (enc_out @ p["cross"]["wk"].astype(dt)).reshape(
                     b, f, cfg.num_kv_heads, cfg.resolved_head_dim)

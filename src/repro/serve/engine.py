@@ -95,7 +95,8 @@ class ServeEngine:
     def attribute_phases(self, traces, *, corrections=None, depth=0,
                          t_shift=0.0, use_fleet=True, chunk=1024,
                          fuse=False, reference=None, streaming=False,
-                         shard=None, collectives=None):
+                         track=None, delays=None, shard=None,
+                         collectives=None):
         """Per-phase energy for the engine's recorded serving phases.
 
         traces: {name: SensorTrace} (e.g. ``NodeFabric.sample_all``) or a
@@ -116,11 +117,16 @@ class ServeEngine:
         streaming stage pipeline (``fleet.pipeline``) in ``chunk``-sized
         windows — per-sensor delays tracked online on sliding windows,
         O(fleet x chunk) memory — instead of the batch align-and-fuse.
+        ``track``/``delays`` pin the tracking mode: fixed per-sensor
+        ``delays`` (track=False) or online tracking seeded by them.
         ``shard``+``collectives`` (streaming only) extend that pipeline
         across ``jax.distributed`` processes: THIS engine's traces are
         the local device groups described by the HostShard, and the
         returned dict covers the local devices with fleet-consistent
-        energies (see ``repro.distributed.multihost``).
+        energies; online tracking state is synchronized over the
+        collectives, so tracked multi-host runs apply the same delay
+        corrections as the single-host tracker (see
+        ``repro.distributed.multihost``).
         """
         phases = [(n, a + t_shift, b + t_shift)
                   for n, a, b in self.tracer.phases(depth=depth)]
@@ -138,7 +144,8 @@ class ServeEngine:
                 all_rows = attribute_energy_fused_multihost(
                     list(groups.values()), phases, shard=shard,
                     collectives=collectives, corrections=corrections,
-                    reference=reference, chunk=chunk)
+                    reference=reference, track=track, delays=delays,
+                    chunk=chunk)
                 rows = [all_rows[g] for g in shard.group_ids]
             elif streaming:
                 from repro.fleet.pipeline import (
@@ -146,12 +153,13 @@ class ServeEngine:
                 rows = attribute_energy_fused_streaming(
                     list(groups.values()), phases,
                     corrections=corrections, reference=reference,
-                    chunk=chunk)
+                    track=track, delays=delays, chunk=chunk)
             else:
                 rows = attribute_energy_fused(list(groups.values()),
                                               phases,
                                               corrections=corrections,
-                                              reference=reference)
+                                              reference=reference,
+                                              delays=delays)
             return dict(zip(groups.keys(), rows))
         from repro.core.attribution import attribute_energy_many
         as_dict = isinstance(traces, dict)

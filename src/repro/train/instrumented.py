@@ -13,9 +13,8 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import numpy as np
 
-from repro.core.attribution import attribute_energy, attribute_power_series
+from repro.core.attribution import attribute_energy
 from repro.core.measurement_model import CHIP_IDLE_W, ToolSpec
 from repro.core.power_model import occupancy_power, phase_power
 from repro.core.sensors import NodeFabric

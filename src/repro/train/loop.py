@@ -7,7 +7,6 @@ overlap compute of *k+1* under XLA's latency-hiding scheduler.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,11 +62,11 @@ def make_train_step(model, opt, lr_fn, *, micro=1, grad_hook=None):
 
             def body(carry, mb):
                 gsum, lsum = carry
-                (l, _), g = jax.value_and_grad(
+                (lval, _), g = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, mb)
                 gsum = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), gsum, g)
-                return (gsum, lsum + l), None
+                return (gsum, lsum + lval), None
 
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -17,12 +17,20 @@ Failure semantics (what the meta-tests pin):
   * on timeout every worker is terminated, then killed, then REAPED
     (join) before ``MultihostTimeout`` is raised — no zombie workers
     and the coordinator port is free again for the next run.
+
+Debuggability: with ``REPRO_MH_LOG_DIR`` set, every worker redirects
+its stdout/stderr (fd-level, so jax/absl C++ logging is captured too)
+to ``$REPRO_MH_LOG_DIR/worker-<i>.log`` and appends its traceback there
+on failure — CI uploads the directory as an artifact when the
+multihost job fails, so coordinator hangs and harness timeouts leave
+per-worker evidence behind.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
 import os
 import socket
+import sys
 import time
 import traceback
 
@@ -82,9 +90,33 @@ def _exit_barrier(n: int, timeout_ms: int = 5000):
         pass
 
 
+def _redirect_to_log(i: int):
+    """fd-level stdout/stderr redirection into the harness log dir
+    (no-op unless ``REPRO_MH_LOG_DIR`` is set).  Line-buffered text on
+    a dup2'd fd: C++-side logging lands in the same file, and the
+    ``os._exit`` exit path loses at most the current line."""
+    log_dir = os.environ.get("REPRO_MH_LOG_DIR")
+    if not log_dir:
+        return False
+    os.makedirs(log_dir, exist_ok=True)
+    # APPEND: several run_multihost calls share one log dir in a CI
+    # job, and the run that matters for the artifact is usually an
+    # EARLIER failing one — truncating would ship the last test's logs
+    f = open(os.path.join(log_dir, f"worker-{i}.log"), "a", buffering=1)
+    os.dup2(f.fileno(), 1)
+    os.dup2(f.fileno(), 2)
+    sys.stdout = os.fdopen(1, "w", buffering=1, closefd=False)
+    sys.stderr = os.fdopen(2, "w", buffering=1, closefd=False)
+    print(f"[multihost harness] ---- worker {i} pid {os.getpid()} "
+          f"(new run) ----")
+    return True
+
+
 def _worker(fn, args, i: int, n: int, port: int, conn):
     """Worker bootstrap: fresh jax + distributed init, then run fn."""
+    logged = False
     try:
+        logged = _redirect_to_log(i)
         os.environ.setdefault("JAX_PLATFORMS", "cpu")
         import jax
         jax.distributed.initialize(f"127.0.0.1:{port}", num_processes=n,
@@ -96,6 +128,8 @@ def _worker(fn, args, i: int, n: int, port: int, conn):
         _exit_barrier(n)
         os._exit(0)
     except BaseException:
+        if logged:
+            traceback.print_exc()       # keep a copy in the worker log
         try:
             conn.send(("error", traceback.format_exc()))
             conn.close()

@@ -17,10 +17,14 @@ SENSORS_PER_DEVICE = 2
 
 
 def sim_groups(n_devices: int, seed: int = 0, span_s: float = 2.5,
-               noise: float = 3.0):
+               noise: float = 3.0, drift_ppm: float = 0.0):
     """Per device: a wrapping energy counter + a noisy power sensor with
     distinct configured delays (the delay spread creates emit-frontier
-    skew between hosts)."""
+    skew between hosts).  ``drift_ppm`` additionally stretches every
+    sensor's clock (the PR-3 ``SensorSpec.drift_ppm`` ground truth), so
+    the true lag moves during the run — the regime only ONLINE delay
+    tracking can follow, used by the synchronized-tracking parity
+    tests."""
     truth = square_wave(span_s / 4.0, 3, lead_s=span_s / 8,
                         tail_s=span_s / 8)
     tool = ToolSpec(0.9e-3)
@@ -29,10 +33,11 @@ def sim_groups(n_devices: int, seed: int = 0, span_s: float = 2.5,
         specs = [
             SensorSpec(name=f"d{d}_energy", scope="chip",
                        kind="energy_cum", quantum=1e-6, wrap_bits=26,
-                       delay_s=0.004 * (d % 5)),
+                       delay_s=0.004 * (d % 5), drift_ppm=drift_ppm),
             SensorSpec(name=f"d{d}_power", scope="chip",
                        kind="power_inst", noise_w=noise, quantum=1e-6,
-                       delay_s=0.011 + 0.003 * (d % 3)),
+                       delay_s=0.011 + 0.003 * (d % 3),
+                       drift_ppm=drift_ppm),
         ]
         groups.append([simulate_sensor(sp, tool, truth,
                                        seed=seed + 31 * d + i)

@@ -1,6 +1,9 @@
 """Meta-tests of the spawn harness itself: result ordering, child
-assertion/exit-code propagation, and timeout cleanup (no zombie workers,
-coordinator port released)."""
+assertion/exit-code propagation, timeout cleanup (no zombie workers,
+coordinator port released), per-worker log capture, and the
+``CoordinatorCollectives`` failure path (a peer dying mid-all-reduce
+surfaces a timeout error instead of hanging the fleet)."""
+import multiprocessing as mp
 import os
 import time
 
@@ -50,6 +53,65 @@ def test_harness_propagates_child_exit_code():
         run_multihost(_exit_3_on_0, 2)
     assert ei.value.process_id == 0
     assert "code 3" in ei.value.detail
+
+
+def _print_and_return():
+    import jax
+    print(f"MH-LOG-MARKER proc {jax.process_index()}", flush=True)
+    return jax.process_index()
+
+
+def test_harness_captures_worker_logs(tmp_path):
+    """With REPRO_MH_LOG_DIR set, every worker's stdout/stderr lands in
+    worker-<i>.log — the artifact the CI multihost job uploads on
+    failure so harness timeouts are debuggable."""
+    log_dir = tmp_path / "mh-logs"
+    out = run_multihost(_print_and_return, 2,
+                        env={"REPRO_MH_LOG_DIR": str(log_dir)})
+    assert out == [0, 1]
+    for i in range(2):
+        text = (log_dir / f"worker-{i}.log").read_text()
+        assert f"MH-LOG-MARKER proc {i}" in text
+        assert "pid" in text               # the harness banner line
+
+
+def _die_mid_allreduce():
+    """Proc 1 dies before posting its frame; proc 0's all-reduce must
+    surface a timeout error — NOT hang until the harness deadline."""
+    import jax
+    from repro.distributed.multihost import CoordinatorCollectives
+    if jax.process_index() == 1:
+        os._exit(7)
+    c = CoordinatorCollectives.from_jax(timeout_s=5)
+    c.allreduce_sum(1.0)                   # peer never posts its key
+    return "unreachable"
+
+
+def test_collectives_worker_death_mid_allreduce_times_out(tmp_path):
+    """CoordinatorCollectives failure path: when a participant dies
+    mid-collective the survivor's blocking KV get hits its deadline and
+    raises (propagated as WorkerFailed) well before the harness
+    timeout, the harness reaps every worker (no zombies), the
+    coordinator port is released, and the workers' logs were captured
+    for post-mortem."""
+    log_dir = tmp_path / "mh-logs"
+    port = free_port()
+    t0 = time.monotonic()
+    with pytest.raises(WorkerFailed) as ei:
+        run_multihost(_die_mid_allreduce, 2, timeout=120, port=port,
+                      env={"REPRO_MH_LOG_DIR": str(log_dir)})
+    # surfaced by the collective's own deadline, not the harness's
+    assert time.monotonic() - t0 < 90
+    detail = ei.value.detail
+    assert ("DEADLINE" in detail or "deadline" in detail
+            or "timed out" in detail.lower() or "code 7" in detail), \
+        detail
+    # reaped: no zombie children, coordinator port free again
+    assert not any(p.name.startswith("mh-worker")
+                   for p in mp.active_children())
+    assert port_is_free(port)
+    assert (log_dir / "worker-0.log").exists()
+    assert (log_dir / "worker-1.log").exists()
 
 
 def test_harness_timeout_kills_and_releases_port():

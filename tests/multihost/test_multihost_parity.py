@@ -97,6 +97,109 @@ def test_two_process_parity_vs_batch_oracle_ragged_fleet():
     assert rel.max() <= 1e-5, rel.max()
 
 
+def _tracked_worker(n_devices, chunk, drift_ppm):
+    import jax
+    from multihost.simdata import (energy_matrix, shared_grid_and_phases,
+                                   sim_groups)
+    from repro.distributed.multihost import (
+        CoordinatorCollectives, attribute_energy_fused_multihost)
+    from repro.fleet import assign_groups
+    truth, groups, _ = sim_groups(n_devices, drift_ppm=drift_ppm)
+    grid, phases = shared_grid_and_phases(groups)
+    sh = assign_groups([len(g) for g in groups], jax.process_count(),
+                       jax.process_index())
+    coll = CoordinatorCollectives.from_jax()
+    local = [groups[g] for g in sh.group_ids]
+    res, pipe = attribute_energy_fused_multihost(
+        local, phases, shard=sh, collectives=coll, grid=grid,
+        reference=truth, track=True, chunk=chunk, window=512, hop=128,
+        record=True, return_pipe=True)
+    g64, watts, mask = pipe.fused_series()
+    series = {int(gid): (watts[j].copy(), mask[j].copy())
+              for j, gid in enumerate(sh.group_ids)}
+    return (energy_matrix(res), series, pipe.fleet_delays(), len(g64),
+            pipe.delays())
+
+
+def _single_host_tracker(n_devices, chunk, drift_ppm):
+    """The single-host ONLINE tracker oracle (plain streaming pipeline,
+    same tracking knobs as ``_tracked_worker``)."""
+    from repro.fleet.pipeline import attribute_energy_fused_streaming
+    truth, groups, _ = sim_groups(n_devices, drift_ppm=drift_ppm)
+    grid, phases = shared_grid_and_phases(groups)
+    return energy_matrix(attribute_energy_fused_streaming(
+        groups, phases, grid=grid, reference=truth, track=True,
+        chunk=chunk, window=512, hop=128))
+
+
+def test_tracked_delay_parity_vs_single_host_tracker():
+    """drift_ppm=200 (the clock-drift regime only ONLINE tracking can
+    follow), 2 spawned processes: the synchronized tracker must
+    reproduce the single-host tracker's fused energies to <=1e-5 —
+    the multi-host tracking state (ring schedule + fleet EMA) is shared
+    over HostCollectives, not re-derived per host."""
+    n_devices, chunk, drift = 3, 257, 200.0
+    out = run_multihost(_tracked_worker, 2, args=(n_devices, chunk,
+                                                  drift))
+    e0, _, fleet_d0, _, local_d0 = out[0]
+    e1, _, fleet_d1, _, local_d1 = out[1]
+    np.testing.assert_array_equal(e0, e1)
+    # every host holds the SAME fleet-wide tracked-delay vector, and
+    # each host's local corrections are exactly its slice of it
+    np.testing.assert_array_equal(fleet_d0, fleet_d1)
+    assert fleet_d0 is not None and len(fleet_d0) == 2 * n_devices
+    np.testing.assert_array_equal(fleet_d0[:len(local_d0)], local_d0)
+    np.testing.assert_array_equal(fleet_d1[len(local_d0):], local_d1)
+    # tracking actually engaged (delays moved off the zero seed)
+    assert np.any(fleet_d0 != 0.0)
+    single = _single_host_tracker(n_devices, chunk, drift)
+    rel = np.abs(e0 - single) / np.maximum(np.abs(single), 1.0)
+    assert rel.max() <= 1e-5, rel.max()
+
+
+@pytest.mark.skipif(len(_proc_counts()) < 2,
+                    reason="REPRO_MH_PROCS allows a single count only")
+def test_tracked_delay_bit_invariance_across_process_counts():
+    """(1, 2, 4)-process TRACKED (drift_ppm=200) runs return
+    bit-identical energies, fused series and fleet delay vectors: the
+    all-reduced ring schedule pins the hop windows, the pinned lag-bank
+    row tiling makes every row's score partition-invariant, and the
+    process-id-ordered (lag, weight) fold is exact under exclusive row
+    ownership."""
+    n_devices, chunk, drift = 5, 193, 200.0
+    runs = {}
+    for n_procs in _proc_counts():
+        out = run_multihost(_tracked_worker, n_procs,
+                            args=(n_devices, chunk, drift))
+        e = out[0][0]
+        d = out[0][2]
+        for e_i, _, d_i, _, _ in out[1:]:
+            np.testing.assert_array_equal(e, e_i)
+            np.testing.assert_array_equal(d, d_i)
+        series = {}
+        n_slots = out[0][3]
+        for _, s_i, _, n_i, _ in out:
+            assert n_i == n_slots          # identical emission schedule
+            series.update(s_i)
+        assert sorted(series) == list(range(n_devices))
+        runs[n_procs] = (e, d, series)
+    base = _proc_counts()[0]
+    e_base, d_base, series_base = runs[base]
+    for n_procs, (e, d, series) in runs.items():
+        np.testing.assert_array_equal(
+            e, e_base, err_msg=f"energies differ at {n_procs} procs")
+        np.testing.assert_array_equal(
+            d, d_base,
+            err_msg=f"tracked delays differ at {n_procs} procs")
+        for dev in range(n_devices):
+            np.testing.assert_array_equal(
+                series[dev][0], series_base[dev][0],
+                err_msg=f"fused watts differ: device {dev}, "
+                        f"{n_procs} vs {base} procs")
+            np.testing.assert_array_equal(series[dev][1],
+                                          series_base[dev][1])
+
+
 def _hpl_worker(n_nodes):
     import jax
     import numpy as np
@@ -118,10 +221,10 @@ def _hpl_worker(n_nodes):
 def test_hpl_fused_energize_spans_hosts():
     """``hpl.energy.fused_fleet_energize(shard=..., collectives=...)``:
     each host simulates only its own nodes' sensor fabrics; the
-    fleet-wide MxP accounting must agree across hosts and stay close to
-    the single-host streaming run (delays are tracked ONLINE per host,
-    so this is the ~2% tracking regime, not the bit-stable fixed-delay
-    one)."""
+    fleet-wide MxP accounting must agree across hosts AND match the
+    single-host streaming tracker to <=1e-5 — online tracking state is
+    now synchronized over the collectives, so the old ~2% per-host-ring
+    drift regime is gone."""
     n_nodes = 2
     out = run_multihost(_hpl_worker, 2, args=(n_nodes,))
     np.testing.assert_array_equal(out[0], out[1])
@@ -135,7 +238,7 @@ def test_hpl_fused_energize_spans_hosts():
                                             streaming=True)])
     assert out[0].shape == single.shape == (n_nodes, 2)
     rel = np.abs(out[0] - single) / np.maximum(np.abs(single), 1.0)
-    assert rel.max() <= 0.02, rel.max()
+    assert rel.max() <= 1e-5, rel.max()
 
 
 @pytest.mark.skipif(len(_proc_counts()) < 2,

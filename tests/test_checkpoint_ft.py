@@ -1,5 +1,3 @@
-import json
-import shutil
 from pathlib import Path
 
 import jax
@@ -79,7 +77,6 @@ def test_elastic_restore_with_shardings(tmp_path, tree):
 
 
 def test_run_with_restarts_recovers():
-    log = []
     state0 = {"x": 0.0}
 
     def make_state():

@@ -1,4 +1,3 @@
-import numpy as np
 
 from repro.core import (ToolSpec, confidence_window, delta_e_over_delta_t,
                         fft_analysis, min_attributable_phase_s,

@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.core import (PowerSeries, ToolSpec, delta_e_over_delta_t,
                         simulate_sensor, square_wave, unwrap_counter)
@@ -56,7 +55,6 @@ def test_energy_between_matches_counter():
 
 
 def test_invert_moving_average():
-    rng = np.random.default_rng(1)
     t = np.arange(2000) * 1e-3
     x = np.where((t // 0.25).astype(int) % 2 == 0, 60.0, 210.0)
     k = 50

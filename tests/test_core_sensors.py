@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core import (NodeFabric, ToolSpec, characterize_sensor,
-                        delta_e_over_delta_t, power_trace_series,
-                        simulate_sensor, square_wave)
+                        power_trace_series, simulate_sensor,
+                        square_wave)
 from repro.core.measurement_model import (chip_energy_sensor,
                                           chip_power_avg_sensor,
                                           chip_power_inst_sensor,

@@ -175,12 +175,12 @@ def test_ssm_kernel_matches_model_layer():
     """The Pallas kernel implements the same recurrence as the model's
     chunked associative scan (drop-in replacement check)."""
     from repro.models.mamba import _chunk_scan
-    b, l, d, n = 2, 64, 128, 16
+    b, s, d, n = 2, 64, 128, 16
     ks = jax.random.split(jax.random.key(2), 5)
-    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, l, d))) * 0.1
-    x = jax.random.normal(ks[1], (b, l, d))
-    bm = jax.random.normal(ks[2], (b, l, n))
-    cm = jax.random.normal(ks[3], (b, l, n))
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, d))) * 0.1
+    x = jax.random.normal(ks[1], (b, s, d))
+    bm = jax.random.normal(ks[2], (b, s, n))
+    cm = jax.random.normal(ks[3], (b, s, n))
     a = -jnp.exp(jax.random.normal(ks[4], (d, n)) * 0.1)
     h0 = jnp.zeros((b, d, n))
     y_k, h_k = selective_scan(dt, x, bm, cm, a, h0, interpret=True)

@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs.base import ArchConfig, MoEConfig, ATTN
+from repro.configs.base import ArchConfig, MoEConfig
 from repro.models.moe import _capacity, _moe_local, moe_specs
 from repro.models.layers import init_params
 

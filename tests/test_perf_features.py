@@ -8,7 +8,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch, reduced
 from repro.models import Model

@@ -9,9 +9,13 @@ the per-window frontier all-reduce plus one end-of-run gather, so the
 measured efficiency is the collectives' overhead directly.
 
 Reported: per-host pipeline seconds (max over workers, jax import and
-simulation excluded) at each host count, and the weak-scaling
-efficiency  eff = t(1 host) / t(N hosts)  (1.0 = free scaling).
-Derived CSV metric: ``eff2`` at 2 hosts.
+simulation excluded) at each host count, the weak-scaling efficiency
+eff = t(1 host) / t(N hosts)  (1.0 = free scaling), and — from one
+extra TRACKED run at the largest host count — the measured wire bytes
+each host posts per window for the framed (frontier, lag/weight)
+collective vs its dense pre-wire-format encoding (``WireStats``).
+Derived CSV metrics: ``eff2`` at 2 hosts, ``payload_b`` (posted
+bytes/window) and ``wire_ratio`` (dense/posted).
 """
 from benchmarks.common import smoke
 
@@ -21,7 +25,7 @@ SPAN_S = smoke(4.5, 2.0)
 HOST_COUNTS = (1, 2)
 
 
-def _bench_worker(groups_per_host, span_s, chunk):
+def _bench_worker(groups_per_host, span_s, chunk, track=False):
     """Per-worker: simulate local groups, attribute, time the pipeline."""
     import time
 
@@ -39,13 +43,17 @@ def _bench_worker(groups_per_host, span_s, chunk):
                        jax.process_index())
     coll = CoordinatorCollectives.from_jax()
     local = [groups[g] for g in sh.group_ids]
+    kw = {"track": True} if track \
+        else {"delays": sh.take_rows(delays)}
     t0 = time.perf_counter()
     res = attribute_energy_fused_multihost(
         local, phases, shard=sh, collectives=coll, grid=grid,
-        delays=sh.take_rows(delays), chunk=chunk)
+        chunk=chunk, **kw)
     dt = time.perf_counter() - t0
     total = float(sum(p.energy_j for row in res for p in row))
-    return dt, len(sh.row_ids), total
+    ws = coll.wire_stats
+    return (dt, len(sh.row_ids), total, ws.frames, ws.payload_bytes,
+            ws.raw_bytes)
 
 
 def main():
@@ -59,7 +67,7 @@ def main():
     for n_hosts in HOST_COUNTS:
         out = run_multihost(_bench_worker, n_hosts,
                             args=(GROUPS_PER_HOST, SPAN_S, CHUNK))
-        times[n_hosts] = max(dt for dt, _, _ in out)
+        times[n_hosts] = max(r[0] for r in out)
         totals[n_hosts] = out[0][2]
         rows_per_host = out[0][1]
         print(f"{n_hosts} host(s): {GROUPS_PER_HOST * n_hosts} groups "
@@ -67,6 +75,19 @@ def main():
               f"{times[n_hosts]:.3f} s, fleet total "
               f"{totals[n_hosts]:.1f} J")
     eff2 = times[1] / times[HOST_COUNTS[-1]]
+    # one tracked run at the largest host count: online delay tracking
+    # makes every window post a framed (frontier, lag/weight) reduce,
+    # so the per-window wire bytes are MEASURED on the real spawned
+    # jax.distributed processes, not modeled
+    n_wire = HOST_COUNTS[-1]
+    out = run_multihost(_bench_worker, n_wire,
+                        args=(GROUPS_PER_HOST, SPAN_S, CHUNK, True))
+    frames = sum(r[3] for r in out)
+    payload_b = sum(r[4] for r in out) / max(frames, 1)
+    wire_ratio = sum(r[5] for r in out) / max(sum(r[4] for r in out), 1)
+    print(f"tracked wire format at {n_wire} hosts: {frames} frames, "
+          f"{payload_b:.1f} B/window posted (x{wire_ratio:.1f} smaller "
+          f"than dense)")
     # fleet totals scale with the fleet; the per-group average stays
     # put (every group sees the same truth schedule — a coarse sanity
     # check that the bigger fleet attributed the same physics)
@@ -78,7 +99,8 @@ def main():
           f"{drift:.2e}")
     assert drift <= 0.05, \
         f"per-group energy drifted across host counts: {drift:.3e}"
-    return times[1] * 1e6, f"eff2={eff2:.2f}"
+    return times[1] * 1e6, (f"eff2={eff2:.2f},payload_b={payload_b:.1f},"
+                            f"wire_ratio=x{wire_ratio:.1f}")
 
 
 if __name__ == "__main__":

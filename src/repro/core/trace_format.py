@@ -9,6 +9,13 @@ Pallas ``power_reconstruct`` / ``phase_integrate`` kernels handle the
 
 One file per node; ``merge_traces`` concatenates nodes for system-level
 analysis (sum node traces over common intervals, §V-B2).
+
+The integer codec primitives at the bottom (zigzag/delta/varint/bitpack)
+are the building blocks of the collective WIRE FORMAT
+(``repro.distributed.compression.encode_reduce_frame``): host-side,
+numpy-only, and exact — they move integers around without ever touching
+a float, so the float64 payloads they frame stay bit-identical through
+an encode/decode round trip.
 """
 from __future__ import annotations
 
@@ -95,3 +102,114 @@ def merge_traces(paths):
             all_sensors[f"node{node}/{name}"] = tr
         metas.append(meta)
     return merged_regions, all_sensors, metas
+
+
+# ---------------------------------------------------------------------------
+# Integer codec primitives (wire-format building blocks)
+# ---------------------------------------------------------------------------
+
+def zigzag_encode(x) -> np.ndarray:
+    """Signed int64 -> unsigned zigzag (small magnitudes stay small).
+
+    0 -> 0, -1 -> 1, 1 -> 2, -2 -> 3, ... — the standard mapping that
+    makes delta streams around a trend bitpack tightly whichever way
+    they drift.
+    """
+    v = np.asarray(x, np.int64)
+    return ((v << 1) ^ (v >> 63)).astype(np.uint64)
+
+
+def zigzag_decode(u) -> np.ndarray:
+    """Inverse of ``zigzag_encode``."""
+    v = np.asarray(u, np.uint64)
+    return ((v >> np.uint64(1)).astype(np.int64)
+            ^ -(v & np.uint64(1)).astype(np.int64))
+
+
+def delta_encode(x) -> np.ndarray:
+    """Int64 sequence -> [first, diffs...] (same length, exact)."""
+    v = np.asarray(x, np.int64)
+    if v.size == 0:
+        return v.copy()
+    return np.concatenate([v[:1], np.diff(v)])
+
+
+def delta_decode(d) -> np.ndarray:
+    """Inverse of ``delta_encode`` (cumulative sum)."""
+    v = np.asarray(d, np.int64)
+    if v.size == 0:
+        return v.copy()
+    return np.cumsum(v)
+
+
+def varint_encode(n: int) -> bytes:
+    """Unsigned LEB128 (7 bits per byte, MSB = continuation)."""
+    n = int(n)
+    assert n >= 0, "varints are unsigned"
+    out = bytearray()
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def varint_decode(buf, offset: int = 0):
+    """-> (value, next offset).  Raises on a truncated varint."""
+    shift = 0
+    value = 0
+    while True:
+        if offset >= len(buf):
+            raise ValueError("truncated varint")
+        b = buf[offset]
+        offset += 1
+        value |= (b & 0x7F) << shift
+        if not (b & 0x80):
+            return value, offset
+        shift += 7
+
+
+def bitpack(values, bits: int) -> bytes:
+    """Pack uint64 values into ``bits``-wide little-endian fields.
+
+    ``bits`` may be 0 (all values zero — nothing is stored) up to 64.
+    Every value must fit in ``bits`` bits; the tail byte is zero-padded.
+    """
+    v = np.asarray(values, np.uint64)
+    assert 0 <= bits <= 64, bits
+    if bits == 0:
+        if v.any():
+            raise ValueError("bits=0 requires all-zero values")
+        return b""
+    if v.size == 0:
+        return b""
+    if bits < 64 and (v >> np.uint64(bits)).any():
+        raise ValueError(f"value wider than {bits} bits")
+    # spread each value over its bit positions, then fold into bytes
+    total = v.size * bits
+    flat = np.zeros(((total + 7) // 8) * 8, np.uint8)
+    pos = np.arange(v.size) * bits
+    for b in range(bits):
+        flat[pos + b] = ((v >> np.uint64(b)) & np.uint64(1)) \
+            .astype(np.uint8)
+    return np.packbits(flat, bitorder="little").tobytes()
+
+
+def bitunpack(data: bytes, bits: int, count: int) -> np.ndarray:
+    """Inverse of ``bitpack`` -> (count,) uint64."""
+    assert 0 <= bits <= 64, bits
+    if bits == 0 or count == 0:
+        return np.zeros((count,), np.uint64)
+    need = (count * bits + 7) // 8
+    if len(data) < need:
+        raise ValueError("truncated bitpacked block")
+    raw = np.frombuffer(data[:need], np.uint8)
+    unp = np.unpackbits(raw, bitorder="little")
+    v = np.zeros((count,), np.uint64)
+    pos = np.arange(count) * bits
+    for b in range(bits):
+        v |= unp[pos + b].astype(np.uint64) << np.uint64(b)
+    return v

@@ -1,4 +1,4 @@
-"""Gradient compression for DP reduction with error feedback.
+"""Gradient compression for DP reduction + the host-collective wire format.
 
 At 1000+ nodes the pod-axis (DCN) gradient all-reduce dominates step time;
 the standard mitigations implemented here:
@@ -11,12 +11,33 @@ the standard mitigations implemented here:
 ``compressed_psum`` is used inside shard_map-based DP; ``make_grad_hook``
 plugs into ``make_train_step(grad_hook=...)`` for the GSPMD path where the
 compression happens before XLA's implicit reduce.
+
+The REDUCE FRAME at the bottom is a different animal: the lossless wire
+format for ``HostCollectives.allreduce_framed`` (the per-window
+(lag, weight) tracking reduces + the emit-frontier/origin scalars that
+ride them — see ``repro.distributed.multihost``).  Those vectors are
+(2, n_global) float64 with non-zeros only on the posting host's rows —
+and ALL-zero on the many windows where no hop fired — so a sparse frame
+(delta + bitpacked indices, raw float64 values) shrinks the per-window
+payload >=10x while keeping every surviving float bit-exact: the fold-
+order determinism rule tolerates no rounding, so the values themselves
+are never quantized, only the zeros and the index bookkeeping are
+compressed away.  A dense-fallback flag keeps adversarial (mostly
+non-zero) vectors no worse than ~raw size.
 """
 from __future__ import annotations
 
+import dataclasses
+import struct
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.trace_format import (bitpack, bitunpack, varint_decode,
+                                     varint_encode, zigzag_decode,
+                                     zigzag_encode)
 
 
 def bf16_compress(x):
@@ -101,3 +122,122 @@ def ef_roundtrip(grads, residual, *, scheme="bf16"):
         raise ValueError(scheme)
     new_res = compute_residual(corrected, rt_f)
     return rt_f, new_res
+
+
+# ---------------------------------------------------------------------------
+# The host-collective reduce frame (lossless wire format)
+# ---------------------------------------------------------------------------
+
+# header: magic(2) + version(1) + flags(1) + raw float64 scalar(8).
+# The 2-byte magic doubles as the segfault guard: jaxlib 0.4.x's
+# blocking_key_value_get_bytes crashes on 1-byte stored values (see
+# CoordinatorCollectives._FRAME), so no frame — even scalar + empty
+# vector — is ever shorter than 2 bytes.
+FRAME_MAGIC = b"RW"
+FRAME_VERSION = 1
+_FLAG_DENSE = 0x01
+_HEADER = struct.Struct("<2sBBd")
+
+MIN_FRAME_BYTES = _HEADER.size          # 12: every frame is at least this
+
+
+def _sparse_body(v: np.ndarray):
+    """(idx_bits, first_zz, packed_gaps, values) for the non-zeros of v,
+    or None when dense raw float64 is no bigger."""
+    nz = np.flatnonzero(v != 0.0)
+    nnz = int(nz.size)
+    body = [varint_encode(nnz)]
+    if nnz:
+        # strictly increasing indices: store the first (varint) and the
+        # gaps-minus-one bitpacked at the widest gap's bit count
+        gaps = np.diff(nz) - 1
+        zz = zigzag_encode(gaps)          # non-negative: zigzag = 2*g
+        idx_bits = int(zz.max()).bit_length() if nnz > 1 else 0
+        body.append(bytes([idx_bits]))
+        body.append(varint_encode(int(nz[0])))
+        body.append(bitpack(zz, idx_bits))
+        body.append(v[nz].tobytes())      # raw float64: bit-exact
+    sparse = b"".join(body)
+    dense = v.tobytes()
+    return sparse if len(sparse) < len(dense) else None
+
+
+def encode_reduce_frame(scalar: float, vec) -> bytes:
+    """(scalar, float64 vector) -> self-describing lossless frame.
+
+    The scalar rides raw float64 (min/max-reduced quantities must stay
+    uncompressed-exact, including ±inf sentinels); the vector is stored
+    sparse (non-zero values raw float64, positions delta + bitpacked)
+    unless dense raw storage is smaller, which the flags byte records.
+    Sign of ZERO elements is not preserved (-0.0 decodes as +0.0); every
+    non-zero element — including NaN and ±inf payloads — round-trips
+    bit-exactly, so a left fold over decoded frames equals the fold over
+    the originals wherever the result is observable.
+    """
+    v = np.ascontiguousarray(np.asarray(vec, np.float64).reshape(-1))
+    sparse = _sparse_body(v)
+    flags = 0 if sparse is not None else _FLAG_DENSE
+    head = _HEADER.pack(FRAME_MAGIC, FRAME_VERSION, flags, float(scalar))
+    body = sparse if sparse is not None else v.tobytes()
+    return head + varint_encode(v.size) + body
+
+
+def decode_reduce_frame(buf: bytes):
+    """Frame -> (scalar, (n,) float64 vector).  Raises on corruption."""
+    if len(buf) < _HEADER.size:
+        raise ValueError(f"reduce frame truncated ({len(buf)} bytes)")
+    magic, version, flags, scalar = _HEADER.unpack_from(buf, 0)
+    if magic != FRAME_MAGIC:
+        raise ValueError(f"bad reduce-frame magic {magic!r}")
+    if version != FRAME_VERSION:
+        raise ValueError(f"unsupported reduce-frame version {version}")
+    n, off = varint_decode(buf, _HEADER.size)
+    if flags & _FLAG_DENSE:
+        end = off + 8 * n
+        if len(buf) < end:
+            raise ValueError("dense reduce frame truncated")
+        return float(scalar), np.frombuffer(buf[off:end],
+                                            np.float64).copy()
+    nnz, off = varint_decode(buf, off)
+    v = np.zeros((n,), np.float64)
+    if nnz:
+        if off >= len(buf):
+            raise ValueError("sparse reduce frame truncated")
+        idx_bits = buf[off]
+        off += 1
+        first, off = varint_decode(buf, off)
+        packed = (nnz - 1) * idx_bits
+        nbytes = (packed + 7) // 8
+        gaps = zigzag_decode(bitunpack(buf[off:off + nbytes], idx_bits,
+                                       nnz - 1))
+        off += nbytes
+        idx = np.concatenate([[first], first + np.cumsum(gaps + 1)]) \
+            if nnz > 1 else np.asarray([first], np.int64)
+        end = off + 8 * nnz
+        if len(buf) < end or int(idx[-1]) >= n:
+            raise ValueError("sparse reduce frame truncated/out of range")
+        v[idx] = np.frombuffer(buf[off:end], np.float64)
+    return float(scalar), v
+
+
+@dataclasses.dataclass
+class WireStats:
+    """Byte counters for the framed host collectives (per participant).
+
+    ``payload_bytes`` counts what this participant actually posted;
+    ``raw_bytes`` is what the pre-wire-format dense encoding
+    (8 bytes x (1 + n)) would have posted — their ratio is the
+    compression the bench gate enforces.
+    """
+    frames: int = 0
+    payload_bytes: int = 0
+    raw_bytes: int = 0
+
+    def record(self, payload: int, raw: int):
+        self.frames += 1
+        self.payload_bytes += int(payload)
+        self.raw_bytes += int(raw)
+
+    @property
+    def ratio(self) -> float:
+        return self.raw_bytes / max(self.payload_bytes, 1)

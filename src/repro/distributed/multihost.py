@@ -67,10 +67,28 @@ class HostCollectives:
     order so every participant computes bit-identical results.  All
     calls are COLLECTIVE: every participant must reach them in lockstep
     or the group deadlocks (until the timeout fires).
+
+    The framed reduces go over the compact lossless wire format
+    (``repro.distributed.compression.encode_reduce_frame``): sparse
+    delta + bitpacked framing for the per-window (lag, weight) vectors,
+    raw float64 for the frontier/origin scalars that ride them —
+    ``wire_stats`` counts the posted vs pre-wire-format dense bytes
+    (the >=10x payload shrink the bench gate enforces).  Scalar-only
+    reduces (``allreduce_min``/``max``/``sum``) stay raw float64: they
+    are already minimal and must be uncompressed-exact.
     """
 
     process_id: int = 0
     num_processes: int = 1
+
+    @property
+    def wire_stats(self):
+        """Per-participant framed-reduce byte counters (lazy)."""
+        from repro.distributed.compression import WireStats
+        ws = getattr(self, "_wire_stats", None)
+        if ws is None:
+            ws = self._wire_stats = WireStats()
+        return ws
 
     def allgather_bytes(self, payload: bytes) -> list:
         raise NotImplementedError
@@ -112,23 +130,34 @@ class HostCollectives:
         per-row lag contributions under exclusive row ownership — the
         float64 sum is EXACT, hence also invariant to the process
         count).  Returns ``(scalar, vec)``.
+
+        The frame on the wire is the compact lossless encoding from
+        ``repro.distributed.compression`` — non-zero values travel as
+        raw float64 (bit-exact, so the fold above is unchanged), only
+        the zeros and index bookkeeping are compressed away.  Posted
+        bytes are tallied in ``wire_stats``.
         """
         assert scalar_op in ("min", "max"), scalar_op
+        from repro.distributed.compression import (decode_reduce_frame,
+                                                   encode_reduce_frame)
         v = np.asarray(vec, np.float64).reshape(-1)
         if self.num_processes == 1:
+            self.wire_stats.record(len(encode_reduce_frame(scalar, v)),
+                                   8 * (1 + v.size))
             return float(scalar), v.copy()
-        payload = np.concatenate([[float(scalar)], v])
-        parts = self.allgather_bytes(payload.tobytes())
-        rows = [np.frombuffer(p, np.float64) for p in parts]
-        assert all(len(r) == len(payload) for r in rows), \
+        payload = encode_reduce_frame(float(scalar), v)
+        self.wire_stats.record(len(payload), 8 * (1 + v.size))
+        parts = self.allgather_bytes(payload)
+        rows = [decode_reduce_frame(p) for p in parts]
+        assert all(r[1].size == v.size for r in rows), \
             "framed reduce: ragged frames (participants disagree on " \
             "the tracked fleet width?)"
         s = rows[0][0]
-        acc = rows[0][1:].copy()
+        acc = rows[0][1].copy()
         red = min if scalar_op == "min" else max
-        for r in rows[1:]:
-            s = red(s, float(r[0]))
-            acc += r[1:]
+        for rs, rv in rows[1:]:
+            s = red(s, float(rs))
+            acc += rv
         return float(s), acc
 
 

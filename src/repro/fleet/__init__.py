@@ -13,7 +13,11 @@ subsystem is the batched counterpart of ``repro.core.reconstruction`` /
                Reconstruct -> AlignTrack -> Regrid/Fuse ->
                PhaseAttribute, every stage one (fleet, chunk) window +
                an explicit carry dataclass; online delay tracking and
-               streaming fused attribution live here
+               streaming fused attribution live here, plus the
+               fused-scan engine (``attribute_totals_fused_scan``)
+               that replays the same chain as ONE jitted ``lax.scan``
+               with a donated carry — the per-window chain stays the
+               parity oracle
   streaming  — ``FleetStream`` / ``StreamingPhaseAccumulator``: thin
                pre-built two-stage pipelines (fused ``fleet_attribute``
                / ``phase_integrate`` kernels), O(fleet × chunk) device
@@ -37,8 +41,10 @@ from repro.fleet.streaming import (FleetStream,  # noqa: F401
 from repro.fleet.pipeline import (AlignTrackStage,  # noqa: F401
                                   IngestStage, PhaseIntegrateStage,
                                   ReconstructStage, RegridFuseStage,
-                                  StreamPipeline, StreamingFusedPipeline,
+                                  ScanResult, StreamPipeline,
+                                  StreamingFusedPipeline,
                                   attribute_energy_fused_streaming,
+                                  attribute_totals_fused_scan,
                                   pack_stream_rows)
 from repro.fleet.api import (attribute_energy_fleet,  # noqa: F401
                              attribute_energy_fused, fleet_power_series)

@@ -3,7 +3,9 @@
 ``fleet_power_series`` replaces ``[delta_e_over_delta_t(tr) for tr in ...]``
 and ``attribute_energy_fleet`` replaces ``[attribute_energy(tr, phases)
 for tr in ...]`` for cumulative-energy traces; the host loops remain the
-parity oracles (tests pin fleet == host).
+parity oracles (tests pin fleet == host).  For fused multi-sensor
+streaming (and its single-scan fast path, ``engine="scan"``) see
+``pipeline.attribute_energy_fused_streaming``.
 """
 from __future__ import annotations
 

@@ -51,6 +51,15 @@ packed traces through this chain in fixed-width chunks and matches the
 batch path; ``FleetStream`` / ``StreamingPhaseAccumulator``
 (fleet/streaming.py) are thin pre-built two-stage pipelines over the
 same Ingest/attribute stages.
+
+The FUSED-SCAN engine (``attribute_totals_fused_scan``, or
+``engine="scan"`` on the replay entry point) collapses the per-window
+chain into one jitted ``lax.scan`` over fixed-size slot blocks with a
+donated carry: the host plans the replay (window edges, delay schedule,
+emit-frontier slot ranges) and the device executes every
+Reconstruct/Regrid/Fuse/PhaseAttribute step without per-window Python
+dispatch.  The per-window path stays the parity oracle (<= 1e-5,
+tracked and untracked) and the only multi-host driver.
 """
 from __future__ import annotations
 
@@ -1474,6 +1483,36 @@ def _min_cadence(rows: StreamRows) -> float:
     return min(steps) if steps else 1e-3
 
 
+def _replay_window_plan(rows: StreamRows, chunk: int = 1024, *,
+                        span=None, cadence: float = None):
+    """Shared window-edge math for replay: -> (n_win, idx).
+
+    ONE definition of the time-aligned replay boundaries, used by both
+    ``stream_row_windows`` (the per-window streaming replay) and the
+    fused-scan planner (``attribute_totals_fused_scan``) — the scan
+    path's emit frontiers reproduce the per-window path's only because
+    both walk identical window edges.  ``idx[i, w]`` is row i's first
+    sample index in window w (idx[:, -1] == S).
+    """
+    f, s = rows.shape
+    n = rows.n_streams
+    dt_win = max(chunk, 2) * (cadence if cadence is not None
+                              else _min_cadence(rows))
+    if span is not None:
+        t_lo, t_hi = float(span[0]), float(span[1])
+    else:
+        t_lo = float(rows.times[:n, 0].astype(np.float64).min())
+        t_hi = float(rows.times[:n, -1].astype(np.float64).max())
+    n_win = max(int(np.ceil((t_hi - t_lo) / dt_win)), 1)
+    edges = (t_lo + dt_win * np.arange(1, n_win)).astype(rows.times.dtype)
+    idx = np.zeros((f, n_win + 1), np.int64)
+    for i in range(n):                       # padding rows stay empty
+        idx[i, 1:-1] = np.searchsorted(rows.times[i], edges,
+                                       side="right")
+        idx[i, -1] = s
+    return n_win, idx
+
+
 def stream_row_windows(rows: StreamRows, chunk: int = 1024, *,
                        span=None, cadence: float = None):
     """Replay packed rows as TIME-aligned (fleet, C) windows.
@@ -1495,22 +1534,8 @@ def stream_row_windows(rows: StreamRows, chunk: int = 1024, *,
     boundaries in lockstep (the frontier all-reduce requires equal
     update counts, and bit-stable emission requires equal edges).
     """
-    f, s = rows.shape
-    n = rows.n_streams
-    dt_win = max(chunk, 2) * (cadence if cadence is not None
-                              else _min_cadence(rows))
-    if span is not None:
-        t_lo, t_hi = float(span[0]), float(span[1])
-    else:
-        t_lo = float(rows.times[:n, 0].astype(np.float64).min())
-        t_hi = float(rows.times[:n, -1].astype(np.float64).max())
-    n_win = max(int(np.ceil((t_hi - t_lo) / dt_win)), 1)
-    edges = (t_lo + dt_win * np.arange(1, n_win)).astype(rows.times.dtype)
-    idx = np.zeros((f, n_win + 1), np.int64)
-    for i in range(n):                       # padding rows stay empty
-        idx[i, 1:-1] = np.searchsorted(rows.times[i], edges,
-                                       side="right")
-        idx[i, -1] = s
+    n_win, idx = _replay_window_plan(rows, chunk, span=span,
+                                     cadence=cadence)
     for w in range(n_win):
         lo, hi = idx[:, w], idx[:, w + 1]
         cnt = hi - lo
@@ -1694,6 +1719,452 @@ class StreamingFusedPipeline:
         return self
 
 
+# ---------------------------------------------------------------------------
+# The fused-scan engine: the whole replay as ONE jitted lax.scan
+# ---------------------------------------------------------------------------
+
+def _scan_closed_rows(rows: StreamRows, *, interpret, use_kernel, host):
+    """Full-run closed rows: -> (t_aug, v_aug, t_first64).
+
+    The per-window chain re-derives these incrementally (Ingest seeds a
+    zero-width carry edge, Reconstruct turns each window's counter
+    intervals into dE/dt); over a full replay the union of those
+    windows is exactly the packed rows with the seed column prepended —
+    equal-time replica columns the replay pads in are search-invisible
+    to the hold lower bound, and dE/dt is interval-local so it
+    telescopes — so one reconstruction over the full rows reproduces
+    every per-window query's source samples bit-for-bit.
+    """
+    t = rows.times
+    v = rows.values
+    kind = np.asarray(rows.kind_row, bool).reshape(-1)
+    t_aug = np.concatenate([t[:, :1], t], axis=1)
+    v_aug = np.concatenate([v[:, :1], v], axis=1)
+    # final t_first, same convention as IngestStage: counters open at
+    # the first strict advance past the seed, power rows at the seed
+    t64 = t_aug.astype(np.float64)
+    adv = t64 > t64[:, :1]
+    j = np.argmax(adv, axis=1)
+    tf = np.where(adv.any(axis=1), t64[np.arange(len(j)), j], np.inf)
+    t_first = np.where(kind, tf, t64[:, 0])
+    if kind.any():
+        wrap = np.zeros((t.shape[0], 1), t_aug.dtype)
+        if host:
+            from repro.kernels.power_reconstruct.ref import wrapped_diff
+            de = wrapped_diff(v_aug.astype(np.float64),
+                              wrap.astype(np.float64), xp=np)
+            dt = np.maximum(np.diff(t_aug.astype(np.float64), axis=1),
+                            1e-12)
+            power = np.pad(de / dt, ((0, 0), (1, 0)))
+        else:
+            power = np.asarray(_reconstruct_window(
+                t_aug, v_aug, wrap, interpret=interpret,
+                use_kernel=True if use_kernel is None else use_kernel))
+        v_aug = np.where(kind[:, None], power.astype(v_aug.dtype), v_aug)
+    return t_aug, v_aug, t_first
+
+
+def _scan_track_delays(rows: StreamRows, rows_t, rows_v, t_first,
+                       last_t, n_win: int, *, group_sizes, reference,
+                       grid_step: float, window: int, hop: int,
+                       max_lag: int, ema: float, min_corr: float,
+                       min_fill, delay0, interpret, use_kernel, host):
+    """AlignTrack replayed on the host: -> (delays_win, history).
+
+    The online tracker's ring is a sliding view of one uniform track
+    grid, filled through the same hold resample the regrid uses — so
+    instead of updating a ring per window, the scan planner resamples
+    the full reconstructed rows at EVERY track slot in one batched
+    query (the AlignTrack-merged-into-Regrid step of the fused scan)
+    and slices each hop's window out of it.  The hop schedule, the
+    xcorr scorer (row tile pinned to ``ROW_ALIGN``), the ``min_corr``
+    gate and the EMA fold are the per-window tracker's own arithmetic
+    on bit-identical inputs, so ``delays_win[w]`` equals the delay
+    vector the per-window path would apply to replay window ``w``.
+    """
+    from repro.align.delay import (estimate_delays, estimate_delays_host,
+                                   stream_reference)
+    f = rows.shape[0]
+    n = rows.n_streams
+    step = float(grid_step)
+    origin = float(rows.times[:n, 0].astype(np.float64).min())
+    delay = np.zeros((f,), np.float64)
+    if delay0 is not None:
+        d0 = np.asarray(delay0, np.float64).reshape(-1)
+        delay[:len(d0)] = d0
+    seen = np.zeros((f,), bool)
+    min_fill = window // 2 if min_fill is None else int(min_fill)
+
+    # hop schedule: which replay windows fire a re-estimate (same
+    # -0.01-step fill margin as the online ring)
+    next_slot, last_est = 0, 0
+    fires = {}                       # window index -> ring frontier slot
+    for w in range(n_win):
+        frontier = float(last_t[:, w].min())
+        hi = int(np.floor((frontier - origin) / step - 0.01))
+        if hi >= next_slot:
+            next_slot = hi + 1
+        if next_slot - last_est >= hop and next_slot >= min_fill:
+            fires[w] = next_slot
+            last_est = next_slot
+
+    delays_win = np.empty((n_win, f), np.float64)
+    history = []
+    if not fires:
+        delays_win[:] = delay[None, :]
+        return delays_win, history
+
+    # one batched resample at every track slot the ring will ever hold
+    # (slots < 0 stay the ring's zero-initialized prefix)
+    max_slot = max(fires.values())
+    grid64 = origin + step * np.arange(max_slot)
+    vals, mask = _query_grid(rows_t, rows_v, grid64, np.zeros((f,)),
+                             t_first, interpret=interpret,
+                             use_kernel=use_kernel, host=host)
+    uk = True if use_kernel is None else use_kernel
+
+    def run(v_win, m_win, ref):
+        if host:
+            return estimate_delays_host(v_win.astype(np.float64), m_win,
+                                        ref, step=step, max_lag=max_lag)
+        return estimate_delays(v_win, m_win.astype(v_win.dtype), ref,
+                               step=step, max_lag=max_lag,
+                               interpret=interpret, use_kernel=uk,
+                               block_rows=ROW_ALIGN)
+
+    for w in range(n_win):
+        ns = fires.get(w)
+        if ns is not None:
+            w_idx = np.arange(ns - window, ns)
+            v_win = np.zeros((f, window), vals.dtype)
+            m_win = np.zeros((f, window), bool)
+            pos = w_idx >= 0
+            v_win[:, pos] = vals[:, w_idx[pos]]
+            m_win[:, pos] = mask[:, w_idx[pos]]
+            times64 = origin + step * w_idx
+            raw = np.zeros((f,))
+            peak = np.zeros((f,))
+            if reference is not None:
+                ref = np.asarray(reference(times64), np.float64)
+                est = run(v_win, m_win, ref)
+                raw, peak = np.asarray(est.delay_s), \
+                    np.asarray(est.peak_corr)
+            else:
+                lo = 0
+                for g in group_sizes:
+                    hi_g = lo + g
+                    ref = stream_reference(v_win[lo], m_win[lo])
+                    est = run(v_win[lo:hi_g], m_win[lo:hi_g], ref)
+                    raw[lo:hi_g] = est.delay_s
+                    peak[lo:hi_g] = est.peak_corr
+                    lo = hi_g
+            good = peak >= min_corr
+            good[n:] = False              # padding rows never track
+            a = np.where(seen, ema, 1.0)  # first estimate: direct
+            delay = np.where(good, (1 - a) * delay + a * raw, delay)
+            seen = seen | good
+            history.append(DelayTrackPoint(
+                t_lo=float(times64[0]), t_hi=float(times64[-1]),
+                t_center=float(0.5 * (times64[0] + times64[-1])),
+                raw=raw[:n].copy(), ema=delay[:n].copy(),
+                peak=peak[:n].copy()))
+        delays_win[w] = delay
+    return delays_win, history
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("block", "width"))
+def _fused_scan_steps(carry, xs, rows_t, rows_v, t_first32, t_last32,
+                      gidx, gmask, phases, origin, step, *, block,
+                      width):
+    """Regrid + fuse + phase-attribute over all emit steps in ONE scan.
+
+    Traced under x64: queries are still formed in the row dtype
+    (float32 — bit-identical lookups to the per-window ``_query_grid``)
+    while the fusion statistics and phase integrals accumulate in
+    float64, exactly like the host-side stage carries.  The carry
+    (donated) holds the whole pipeline state: per-stream (n_k, ssr),
+    per-device (t_prev, seen) bridging, and the per-(device, pattern,
+    phase, stream) integrals the windowed ``FusedPhaseAttributeStage``
+    keeps as dicts — here a dense (D, 2^K, P, K) block so every window
+    is one einsum.
+
+    Each step's hold lookup searches only a ``width``-column slice of
+    every row, starting at the host-planned per-(step, row) offset in
+    ``xs`` — the planner proves the slice covers every lower bound the
+    step's queries can hit (rows are time-sorted and the emit frontier
+    moves monotonically), so the sliced search returns the SAME indices
+    as a full-row search at a fraction of the work.
+    """
+    import jax.numpy as jnp
+    f, s = rows_t.shape
+    iota = jnp.arange(block)
+    k = gidx.shape[1]
+    slice_row = jax.vmap(
+        lambda row, s0: jax.lax.dynamic_slice(row, (s0,), (width,)))
+
+    def body(c, x):
+        n_k, ssr, t_prev, seen, integrals = c
+        lo, cnt, st, d32 = x
+        grid64 = origin + step * (lo + iota)
+        g32 = grid64.astype(rows_t.dtype)
+        ge = g32[None, :] + d32[:, None]      # row-dtype, as the op
+        blk_t = slice_row(rows_t, st)
+        blk_v = slice_row(rows_v, st)
+        idx = jax.vmap(lambda a, v: jnp.searchsorted(
+            a, v, side="left"))(blk_t, ge)
+        out = jnp.take_along_axis(blk_v, jnp.clip(idx, 0, width - 1),
+                                  axis=1)
+        mask = (ge >= t_first32[:, None]) & (ge <= t_last32[:, None]) \
+            & (iota < cnt)[None, :]
+        vals = jnp.where(mask, out, 0.0)
+        # per-group fusion statistics (the RegridFuse carry update)
+        vg = vals[gidx].astype(jnp.float64) * gmask[:, :, None]
+        mg = mask[gidx].astype(jnp.float64) * gmask[:, :, None]
+        cnt_g = mg.sum(axis=1)                               # (D, B)
+        m0 = (vg * mg).sum(axis=1) / jnp.maximum(cnt_g, 1.0)
+        resid = (vg - m0[:, None, :]) * mg
+        n_k = n_k.at[gidx].add(mg.sum(axis=2))
+        ssr = ssr.at[gidx].add((resid * resid).sum(axis=2))
+        # dense t_lo bridging (invalid slots fold into the next valid)
+        anyv = cnt_g > 0
+        gt = jnp.where(anyv, grid64[None, :], -jnp.inf)
+        run = jax.lax.cummax(gt, axis=1)
+        prev = jnp.concatenate(
+            [jnp.full((gt.shape[0], 1), -jnp.inf), run[:, :-1]], axis=1)
+        t_lo = jnp.maximum(prev, t_prev[:, None])
+        first_ever = anyv & (~seen[:, None]) \
+            & (jnp.cumsum(anyv, axis=1) == 1)
+        t_lo = jnp.where(first_ever, grid64[None, :], t_lo)
+        # overlap of [t_lo, grid] with phase [a, b] as F(grid) - F(t_lo)
+        # where F(x) = clip(x - a, 0, b - a): the F(grid) term is
+        # device-independent, so only F(t_lo) costs (D, P, B) work
+        a = phases[:, 0]
+        blen = jnp.maximum(phases[:, 1] - a, 0.0)
+        f_g = jnp.clip(grid64[None, :] - a[:, None], 0.0,
+                       blen[:, None])                        # (P, B)
+        f_lo = jnp.clip(t_lo[:, None, :] - a[None, :, None], 0.0,
+                        blen[None, :, None])
+        # no anyv mask needed: invalid slots carry zero fusion weight
+        # (vg * mg == 0) and the clip keeps f_lo finite even at -inf
+        ov = f_g[None, :, :] - f_lo                          # (D, P, B)
+        # coverage-pattern one-hot: the windowed dict-of-patterns as a
+        # dense (D, 2^K, P, K) accumulate
+        pows = 2.0 ** jnp.arange(k, dtype=jnp.float64)
+        pat = (mg * pows[None, :, None]).sum(axis=1)         # (D, B)
+        qn = integrals.shape[1]
+        onehot = (pat[:, None, :]
+                  == jnp.arange(qn, dtype=jnp.float64)[None, :, None])
+        integrals = integrals + jnp.einsum(
+            'dqj,dpj,dkj->dqpk', onehot.astype(jnp.float64), ov,
+            vg * mg)
+        t_prev = jnp.maximum(t_prev, run[:, -1])
+        seen = seen | anyv.any(axis=1)
+        return (n_k, ssr, t_prev, seen, integrals), None
+
+    carry, _ = jax.lax.scan(body, carry, xs)
+    return carry
+
+
+@dataclasses.dataclass
+class ScanResult:
+    """What the fused-scan engine hands back (host numpy)."""
+    totals: np.ndarray         # (n_devices, n_phases) fused joules
+    weights: np.ndarray        # (n_streams,) end-of-run IVW weights
+    delays: np.ndarray         # (n_streams,) final per-stream delay
+    history: list              # [DelayTrackPoint] (tracked mode)
+    n_steps: int               # scan steps executed
+    n_slots: int               # grid slots emitted
+
+
+def attribute_totals_fused_scan(rows: StreamRows, group_sizes, phases,
+                                *, grid_origin: float, grid_step: float,
+                                t_end: float = None, chunk: int = 1024,
+                                delays=None, reference=None,
+                                track: bool = None, window: int = 2048,
+                                hop: int = 512, max_lag: int = 64,
+                                ema: float = 0.5, min_corr: float = 0.2,
+                                min_fill: int = None,
+                                var_floor: float = 0.25,
+                                scan_block: int = 512, interpret=None,
+                                use_kernel=None,
+                                host: bool = False) -> ScanResult:
+    """The streaming chain fused into one jitted ``lax.scan``.
+
+    Plans on the host (replay window edges via ``_replay_window_plan``
+    — the SAME edge math the per-window replay walks — then the delay
+    schedule and the emit-frontier slot ranges), and executes every
+    Reconstruct -> Regrid/Fuse -> PhaseAttribute step as one scan over
+    fixed-size slot blocks with a donated carry: no per-window Python
+    dispatch, no per-stage jit boundaries, no host round-trips in the
+    hot loop.  AlignTrack's ring fill is merged into the same batched
+    hold-resample the regrid uses (``_scan_track_delays``), which the
+    emit frontier allows because every ring slot is behind it by
+    construction.  Single-host replay only — the multi-host path keeps
+    the per-window stages (its frontier all-reduces are per-window by
+    contract); the per-window path also remains the parity oracle
+    (streamed vs fused-scan <= 1e-5, tracked and untracked).
+
+    Arguments mirror ``StreamingFusedPipeline``; ``scan_block`` is the
+    slots-per-step width (compiled shape).  Returns a ``ScanResult``.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    group_sizes = list(group_sizes)
+    n = int(sum(group_sizes))
+    assert n == rows.n_streams, (n, rows.n_streams)
+    k_max = int(max(group_sizes))
+    assert k_max <= 8, \
+        f"fused scan holds 2^k coverage patterns per device (k={k_max})"
+    f = rows.shape[0]
+    if track is None:
+        track = delays is None
+    interpret = auto_interpret(interpret)
+    origin = float(grid_origin)
+    step = float(grid_step)
+
+    t_aug, v_aug, t_first = _scan_closed_rows(
+        rows, interpret=interpret, use_kernel=use_kernel, host=host)
+    sent_t = np.full((f, 1), -np.inf, t_aug.dtype)
+    sent_v = np.zeros((f, 1), v_aug.dtype)
+    rows_t = np.concatenate([sent_t, t_aug], axis=1)
+    rows_v = np.concatenate([sent_v, v_aug], axis=1)
+
+    emits = []
+    next_slot = 0
+    if track:
+        n_win, idx = _replay_window_plan(rows, chunk)
+        cols = np.maximum(idx[:, 1:] - 1, np.maximum(idx[:, :-1] - 1, 0))
+        last_t = np.take_along_axis(rows.times, cols,
+                                    axis=1).astype(np.float64)[:n]
+        delays_win, history = _scan_track_delays(
+            rows, rows_t, rows_v, t_first, last_t, n_win,
+            group_sizes=group_sizes, reference=reference,
+            grid_step=step, window=window, hop=hop, max_lag=max_lag,
+            ema=ema, min_corr=min_corr, min_fill=min_fill,
+            delay0=delays, interpret=interpret, use_kernel=use_kernel,
+            host=host)
+        # emit schedule: identical frontier floors/margins to RegridFuse
+        for w in range(n_win):
+            frontier = float((last_t[:, w] - delays_win[w, :n]).min())
+            hi = int(np.floor((frontier - origin) / step - 0.01))
+            if hi >= next_slot:
+                emits.append((next_slot, hi, w))
+                next_slot = hi + 1
+        if t_end is None:
+            t_end = float((last_t[:, -1] - delays_win[-1, :n]).max())
+    else:
+        # untracked fast path: the delay vector is constant, so every
+        # slot's contribution is window-independent and the per-window
+        # emit partition only regroups the same f64 sums (<= a few ulps,
+        # inside the 1e-5 parity envelope) — skip the replay window
+        # plan entirely and emit one [0, flush] range
+        d0 = np.zeros((f,), np.float64)
+        if delays is not None:
+            dv = np.asarray(delays, np.float64).reshape(-1)
+            d0[:len(dv)] = dv
+        delays_win = d0[None, :]
+        history = []
+        if t_end is None:
+            last_real = rows.times[np.arange(f), rows.n_samples - 1] \
+                .astype(np.float64)
+            t_end = float((last_real[:n] - d0[:n]).max())
+    hi = int(np.floor((float(t_end) - origin) / step + 1e-9))
+    if hi >= next_slot:                   # the flush window
+        emits.append((next_slot, hi, len(delays_win) - 1))
+        next_slot = hi + 1
+    n_slots = next_slot
+
+    # re-chunk emit windows into fixed-size scan steps (each step stays
+    # inside ONE emitted window, so it carries that window's delays)
+    blk = int(scan_block)
+    step_lo, step_cnt, step_w = [], [], []
+    for (lo, hi, w) in emits:
+        c = lo
+        while c <= hi:
+            cc = min(blk, hi - c + 1)
+            step_lo.append(c)
+            step_cnt.append(cc)
+            step_w.append(w)
+            c += cc
+    t_steps = len(step_lo)
+
+    # per-(step, row) search-slice plan: replicate the scan body's f32
+    # query arithmetic exactly, bracket each step's lower bounds with
+    # two vectorized searchsorteds per row, and size one static slice
+    # width that covers the widest step
+    s_pad = rows_t.shape[1]
+    width = min(64, s_pad)
+    starts = np.zeros((max(t_steps, 1), f), np.int32)
+    if t_steps:
+        lo_arr = np.asarray(step_lo, np.int64)
+        hi_arr = lo_arr + np.asarray(step_cnt, np.int64) - 1
+        d32 = delays_win[np.asarray(step_w)].astype(np.float32)
+        q_lo = (origin + step * lo_arr).astype(np.float32)[:, None] + d32
+        q_hi = (origin + step * hi_arr).astype(np.float32)[:, None] + d32
+        ends = np.zeros((t_steps, f), np.int64)
+        for r in range(f):
+            starts[:, r] = np.searchsorted(rows_t[r], q_lo[:, r],
+                                           side="left")
+            ends[:, r] = np.searchsorted(rows_t[r], q_hi[:, r],
+                                         side="left")
+        ends = np.minimum(ends, s_pad - 1)   # beyond-span queries mask
+        width = int((ends - starts).max()) + 1
+        width = min(max(_round_up(width, 64), 64), s_pad)
+        starts = np.clip(starts, 0, s_pad - width).astype(np.int32)
+
+    d = len(group_sizes)
+    ph = np.asarray(phases, np.float64).reshape(-1, 2)
+    p = len(ph)
+    qn = 1 << k_max
+    off = np.concatenate([[0], np.cumsum(group_sizes)]).astype(np.int64)
+    gidx = np.zeros((d, k_max), np.int32)
+    gmask = np.zeros((d, k_max), np.float64)
+    for di, kk in enumerate(group_sizes):
+        gidx[di, :kk] = off[di] + np.arange(kk)
+        gmask[di, :kk] = 1.0
+
+    if t_steps:
+        xs = (np.asarray(step_lo, np.int64),
+              np.asarray(step_cnt, np.int32), starts,
+              np.ascontiguousarray(
+                  delays_win[np.asarray(step_w)].astype(np.float32)))
+        carry0 = (np.zeros((n,)), np.zeros((n,)),
+                  np.full((d,), -np.inf), np.zeros((d,), bool),
+                  np.zeros((d, qn, p, k_max)))
+        with enable_x64():
+            carry = _fused_scan_steps(
+                jax.tree.map(jnp.asarray, carry0),
+                jax.tree.map(jnp.asarray, xs),
+                jnp.asarray(rows_t), jnp.asarray(rows_v),
+                jnp.asarray(t_first.astype(rows_t.dtype)),
+                jnp.asarray(rows_t[:, -1]),
+                jnp.asarray(gidx), jnp.asarray(gmask),
+                jnp.asarray(ph), jnp.asarray(np.float64(origin)),
+                jnp.asarray(np.float64(step)), block=blk, width=width)
+        n_k, ssr, _, _, integrals = [np.asarray(c) for c in carry]
+    else:
+        n_k = np.zeros((n,))
+        ssr = np.zeros((n,))
+        integrals = np.zeros((d, qn, p, k_max))
+
+    w_flat = _ivw_weights(n_k, ssr, var_floor)
+    out = np.zeros((d, p))
+    lo = 0
+    for di, kk in enumerate(group_sizes):
+        wv = w_flat[lo:lo + kk]
+        for pat in range(1, 1 << kk):
+            member = (pat >> np.arange(kk)) & 1
+            w_tot = float((wv * member).sum())
+            if w_tot > 0:
+                out[di] += integrals[di, pat][:, :kk] @ wv / w_tot
+        lo += kk
+    return ScanResult(totals=out, weights=w_flat,
+                      delays=np.asarray(delays_win[-1][:n],
+                                        np.float64).copy(),
+                      history=history, n_steps=t_steps, n_slots=n_slots)
+
+
 def attribute_energy_fused_streaming(trace_groups, phases, *,
                                      chunk: int = 1024, reference=None,
                                      corrections=None, grid=None,
@@ -1704,8 +2175,8 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
                                      var_floor: float = 0.25,
                                      use_t_measured: bool = True,
                                      dtype=np.float32, interpret=None,
-                                     use_kernel=None,
-                                     host: bool = False) -> list:
+                                     use_kernel=None, host: bool = False,
+                                     engine: str = "windowed") -> list:
     """Streaming-first counterpart of ``align.attribute_energy_fused``.
 
     trace_groups: [[SensorTrace, ...], ...] — all sensors observing one
@@ -1717,6 +2188,12 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
     (absolute) pins the output grid for batch-replay parity; otherwise
     a default grid at half the fastest cadence is derived.  Returns one
     ``[PhaseEnergy]`` per group.
+
+    engine: ``"windowed"`` drives the per-window stage chain (the
+    oracle, and the only multi-host path); ``"scan"`` plans the same
+    replay on the host and executes it as one jitted ``lax.scan``
+    (``attribute_totals_fused_scan``) — same results to <= 1e-5,
+    several times the throughput (see ``benchmarks/bench_stream.py``).
     """
     from repro.core.attribution import PhaseEnergy
     groups = [list(g) for g in trace_groups]
@@ -1734,7 +2211,8 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
         origin = float(rows.times[:rows.n_streams, 0]
                        .astype(np.float64).min())
         t_end = None
-    if tail is None:
+    if tail is None and engine == "windowed":
+        # the scan engine has no carry tail — don't pay the cadence scan
         tail = default_tail(rows, chunk, delays=delays,
                             max_lag=max_lag, grid_step=grid_step)
     ref = None
@@ -1748,17 +2226,27 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
     if not phases:
         return [[] for _ in groups]
     windows = [(a - rows.t0, b - rows.t0) for _, a, b in phases]
-    pipe = StreamingFusedPipeline(
-        [len(g) for g in groups], windows, grid_origin=origin,
-        grid_step=grid_step, kind_row=rows.kind_row, delays=delays,
-        reference=ref, track=track, window=window, hop=hop,
-        max_lag=max_lag, ema=ema, tail=tail, var_floor=var_floor,
-        dtype=dtype, interpret=interpret, use_kernel=use_kernel,
-        host=host)
-    for t_blk, v_blk in stream_row_windows(rows, chunk):
-        pipe.update(t_blk, v_blk)
-    pipe.finalize(t_end)
-    totals = pipe.totals()
+    assert engine in ("windowed", "scan"), engine
+    if engine == "scan":
+        res = attribute_totals_fused_scan(
+            rows, [len(g) for g in groups], windows, grid_origin=origin,
+            grid_step=grid_step, t_end=t_end, chunk=chunk, delays=delays,
+            reference=ref, track=track, window=window, hop=hop,
+            max_lag=max_lag, ema=ema, var_floor=var_floor,
+            interpret=interpret, use_kernel=use_kernel, host=host)
+        totals = res.totals
+    else:
+        pipe = StreamingFusedPipeline(
+            [len(g) for g in groups], windows, grid_origin=origin,
+            grid_step=grid_step, kind_row=rows.kind_row, delays=delays,
+            reference=ref, track=track, window=window, hop=hop,
+            max_lag=max_lag, ema=ema, tail=tail, var_floor=var_floor,
+            dtype=dtype, interpret=interpret, use_kernel=use_kernel,
+            host=host)
+        for t_blk, v_blk in stream_row_windows(rows, chunk):
+            pipe.update(t_blk, v_blk)
+        pipe.finalize(t_end)
+        totals = pipe.totals()
     out = []
     for di in range(len(groups)):
         row = []

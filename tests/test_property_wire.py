@@ -1,0 +1,62 @@
+"""Hypothesis property tests on the collective wire format codecs."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dev dep: skip, don't error
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.trace_format import (bitpack, bitunpack, delta_decode,
+                                     delta_encode, varint_decode,
+                                     varint_encode, zigzag_decode,
+                                     zigzag_encode)
+from repro.distributed.compression import (MIN_FRAME_BYTES,
+                                           decode_reduce_frame,
+                                           encode_reduce_frame)
+
+i64 = st.integers(-(2**63), 2**63 - 1)
+f64 = st.floats(allow_nan=False, width=64)
+
+
+@given(st.lists(i64, max_size=64))
+@settings(max_examples=80, deadline=None)
+def test_prop_zigzag_delta_roundtrip(xs):
+    v = np.asarray(xs, np.int64)
+    np.testing.assert_array_equal(zigzag_decode(zigzag_encode(v)), v)
+    # exact even when diffs wrap: both diff and cumsum are mod 2^64
+    with np.errstate(over="ignore"):
+        np.testing.assert_array_equal(delta_decode(delta_encode(v)), v)
+
+
+@given(st.integers(0, 2**64 - 1))
+@settings(max_examples=80, deadline=None)
+def test_prop_varint_roundtrip(n):
+    val, off = varint_decode(varint_encode(n))
+    assert val == n
+
+
+@given(st.integers(1, 64), st.lists(st.integers(0, 2**64 - 1),
+                                    max_size=40))
+@settings(max_examples=80, deadline=None)
+def test_prop_bitpack_roundtrip(bits, xs):
+    v = np.asarray(xs, np.uint64)
+    if bits < 64:
+        v = v & np.uint64((1 << bits) - 1)
+    np.testing.assert_array_equal(
+        bitunpack(bitpack(v, bits), bits, v.size), v)
+
+
+@given(f64, st.lists(f64, max_size=48), st.data())
+@settings(max_examples=100, deadline=None)
+def test_prop_frame_roundtrip(scalar, xs, data):
+    v = np.asarray(xs, np.float64)
+    # sprinkle zeros so both sparse and dense paths get exercised
+    if v.size:
+        k = data.draw(st.integers(0, v.size))
+        idx = data.draw(st.permutations(range(v.size)))[:k]
+        v[np.asarray(idx, np.int64)] = 0.0
+    frame = encode_reduce_frame(scalar, v)
+    assert len(frame) >= MIN_FRAME_BYTES
+    s, out = decode_reduce_frame(frame)
+    np.testing.assert_array_equal(np.float64(s), np.float64(scalar))
+    np.testing.assert_array_equal(out, np.where(v == 0.0, 0.0, v))

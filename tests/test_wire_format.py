@@ -1,0 +1,218 @@
+"""The collective wire format: codec primitives + reduce frames.
+
+Covers the lossless framing behind ``HostCollectives.allreduce_framed``:
+integer codecs round-trip exactly (empty / single-element / constant /
+adversarial-magnitude inputs), frames decode to bit-identical float64
+payloads, the left fold over decoded frames equals the fold over the
+originals, and no frame can ever hit the jaxlib 0.4.x 1-byte KV-store
+segfault (``blocking_key_value_get_bytes`` crashes on 1-byte values —
+see ROADMAP).  Property tests ride hypothesis when it is installed.
+"""
+import numpy as np
+import pytest
+
+from repro.core.trace_format import (bitpack, bitunpack, delta_decode,
+                                     delta_encode, varint_decode,
+                                     varint_encode, zigzag_decode,
+                                     zigzag_encode)
+from repro.distributed.compression import (MIN_FRAME_BYTES,
+                                           decode_reduce_frame,
+                                           encode_reduce_frame, WireStats)
+from repro.distributed.multihost import ThreadCollectives
+
+
+# ---------------------------------------------------------------------------
+# codec primitives
+# ---------------------------------------------------------------------------
+
+INT_CASES = [
+    np.asarray([], np.int64),                       # empty
+    np.asarray([0], np.int64),                      # single element
+    np.asarray([7] * 13, np.int64),                 # constant
+    np.asarray([-1, 1, -2, 2, 0], np.int64),        # sign-alternating
+    np.asarray([2**62, -(2**62), 2**63 - 1, -(2**63)], np.int64),
+]
+
+
+@pytest.mark.parametrize("v", INT_CASES, ids=range(len(INT_CASES)))
+def test_zigzag_roundtrip(v):
+    np.testing.assert_array_equal(zigzag_decode(zigzag_encode(v)), v)
+
+
+def test_zigzag_mapping():
+    # the standard interleave: small magnitudes stay small either way
+    got = zigzag_encode([0, -1, 1, -2, 2])
+    np.testing.assert_array_equal(got, np.asarray([0, 1, 2, 3, 4],
+                                                  np.uint64))
+
+
+@pytest.mark.parametrize("v", INT_CASES, ids=range(len(INT_CASES)))
+def test_delta_roundtrip(v):
+    np.testing.assert_array_equal(delta_decode(delta_encode(v)), v)
+
+
+def test_delta_constant_is_mostly_zero():
+    d = delta_encode(np.full(40, 1234, np.int64))
+    assert d[0] == 1234 and not d[1:].any()
+
+
+@pytest.mark.parametrize("n", [0, 1, 127, 128, 300, 2**31, 2**63])
+def test_varint_roundtrip(n):
+    buf = varint_encode(n)
+    val, off = varint_decode(buf)
+    assert (val, off) == (n, len(buf))
+
+
+def test_varint_truncation_raises():
+    buf = varint_encode(2**31)
+    with pytest.raises(ValueError):
+        varint_decode(buf[:-1])
+
+
+@pytest.mark.parametrize("bits", [0, 1, 3, 7, 13, 32, 63, 64])
+def test_bitpack_roundtrip(bits):
+    rng = np.random.default_rng(bits)
+    if bits == 0:
+        v = np.zeros(17, np.uint64)
+    elif bits == 64:
+        v = rng.integers(0, 2**63, 17).astype(np.uint64) * 2 + 1
+    else:
+        v = rng.integers(0, 2**bits, 17).astype(np.uint64)
+    np.testing.assert_array_equal(bitunpack(bitpack(v, bits), bits, 17), v)
+
+
+def test_bitpack_empty_and_overflow():
+    assert bitpack(np.asarray([], np.uint64), 5) == b""
+    np.testing.assert_array_equal(bitunpack(b"", 5, 0),
+                                  np.zeros(0, np.uint64))
+    with pytest.raises(ValueError):
+        bitpack(np.asarray([8], np.uint64), 3)   # 8 needs 4 bits
+    with pytest.raises(ValueError):
+        bitpack(np.asarray([1], np.uint64), 0)   # bits=0 must be all-zero
+    with pytest.raises(ValueError):
+        bitunpack(b"\x01", 13, 5)                # truncated block
+
+
+# ---------------------------------------------------------------------------
+# reduce frames
+# ---------------------------------------------------------------------------
+
+FRAME_CASES = [
+    (0.0, np.asarray([], np.float64)),                 # empty vector
+    (-1.5, np.asarray([3.25], np.float64)),            # single element
+    (2.0, np.zeros(64, np.float64)),                   # all-zero (no hop)
+    (0.5, np.full(9, 7.75, np.float64)),               # constant dense
+    (np.inf, np.asarray([0.0, -0.125, 0.0, 5e-324, 1e308, 0.0])),
+    (-np.inf, np.linspace(-1e9, 1e9, 33)),             # fully dense
+]
+
+
+@pytest.mark.parametrize("scalar,vec", FRAME_CASES,
+                         ids=range(len(FRAME_CASES)))
+def test_frame_roundtrip_exact(scalar, vec):
+    s, v = decode_reduce_frame(encode_reduce_frame(scalar, vec))
+    # scalar must be uncompressed-exact, including ±inf sentinels
+    np.testing.assert_array_equal(np.float64(s), np.float64(scalar))
+    assert v.dtype == np.float64 and v.shape == vec.shape
+    # every surviving float bit-exact (zeros may lose their sign)
+    np.testing.assert_array_equal(v, np.where(vec == 0.0, 0.0, vec))
+
+
+def test_frame_nan_payload_bit_exact():
+    vec = np.asarray([0.0, np.nan, -np.nan, 1.0])
+    _, v = decode_reduce_frame(encode_reduce_frame(0.0, vec))
+    np.testing.assert_array_equal(v.view(np.uint64)[1:3],
+                                  vec.view(np.uint64)[1:3])
+
+
+def test_frame_sparse_beats_dense():
+    v = np.zeros(256, np.float64)
+    v[::16] = np.pi
+    frame = encode_reduce_frame(1.0, v)
+    assert len(frame) < 8 * (1 + v.size) / 10     # the >=10x target
+    _, out = decode_reduce_frame(frame)
+    np.testing.assert_array_equal(out, v)
+
+
+def test_frame_dense_fallback_bounded():
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(128)                  # fully dense
+    frame = encode_reduce_frame(0.0, v)
+    assert len(frame) <= MIN_FRAME_BYTES + 3 + 8 * v.size
+    _, out = decode_reduce_frame(frame)
+    np.testing.assert_array_equal(out, v)
+
+
+def test_frame_never_one_byte():
+    """jaxlib 0.4.x blocking_key_value_get_bytes segfaults on 1-byte KV
+    values; every frame must stay well clear of that."""
+    assert MIN_FRAME_BYTES >= 2
+    for scalar, vec in FRAME_CASES:
+        assert len(encode_reduce_frame(scalar, vec)) >= MIN_FRAME_BYTES
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda b: b[:1],                               # truncated header
+    lambda b: b"XX" + b[2:],                       # bad magic
+    lambda b: b[:2] + b"\x09" + b[3:],             # unknown version
+    lambda b: b[:-3],                              # truncated values
+])
+def test_frame_corruption_raises(mutate):
+    frame = encode_reduce_frame(1.0, np.arange(8, dtype=np.float64))
+    with pytest.raises(ValueError):
+        decode_reduce_frame(mutate(frame))
+
+
+def test_wire_stats_ratio():
+    ws = WireStats()
+    assert ws.ratio == 0.0 or ws.payload_bytes == 0
+    ws.record(20, 400)
+    ws.record(15, 400)
+    assert ws.frames == 2 and ws.payload_bytes == 35
+    assert ws.ratio == pytest.approx(800 / 35)
+
+
+# ---------------------------------------------------------------------------
+# fold equivalence through real collectives
+# ---------------------------------------------------------------------------
+
+def test_framed_fold_matches_dense_fold():
+    """allreduce_framed over the wire format == the dense left fold."""
+    rng = np.random.default_rng(7)
+    n, procs = 48, 4
+    vecs = []
+    for p in range(procs):
+        v = np.zeros(n, np.float64)
+        rows = rng.choice(n, size=6, replace=False)
+        v[rows] = rng.standard_normal(6) * 10.0 ** rng.integers(-6, 7, 6)
+        vecs.append(v)
+    scalars = [3.0, -1.0, 2.5, -1.0]
+
+    expected_s = min(scalars)
+    expected_v = vecs[0].copy()
+    for v in vecs[1:]:
+        expected_v = expected_v + v                # left fold in id order
+
+    group = ThreadCollectives(procs)
+    parts = [group.participant(p) for p in range(procs)]
+    import threading
+    results = [None] * procs
+
+    def worker(pid):
+        results[pid] = parts[pid].allreduce_framed(scalars[pid],
+                                                   vecs[pid])
+
+    threads = [threading.Thread(target=worker, args=(p,))
+               for p in range(procs)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    for pid, (s, v) in enumerate(results):
+        assert s == expected_s
+        np.testing.assert_array_equal(v, expected_v)  # bit-identical
+        ws = parts[pid].wire_stats
+        assert ws.frames == 1
+        assert ws.raw_bytes == 8 * (1 + n)
+        assert ws.payload_bytes < ws.raw_bytes / 4

@@ -36,4 +36,6 @@ from repro.align.regrid import (SeriesRows, make_grid,  # noqa: F401
 from repro.align.fusion import (FusedStream, align_and_fuse,  # noqa
                                 align_fuse_host, attribute_energy_fused,
                                 fuse_gridded, fuse_gridded_host,
-                                group_traces_by_device, validate_streams)
+                                group_traces_by_device, validate_streams,
+                                DeviceValidation, StreamValidation,
+                                ValidationReport)

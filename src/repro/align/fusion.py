@@ -255,13 +255,92 @@ def align_and_fuse(groups, *, reference=None, grid=None, grid_step=None,
     return out
 
 
-def validate_streams(groups, **kw) -> dict:
+# per-grid-slot data-quality flag bits (ValidationReport.slot_flags)
+FLAG_NO_COVERAGE = 1        # no stream valid at the slot
+FLAG_PARTIAL_COVERAGE = 2   # some but not all streams valid
+FLAG_HIGH_DISAGREEMENT = 4  # disagreement > disagree_frac * |fused|
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamValidation:
+    """One sensor stream's §V-B row: bias/RMS vs the fused consensus,
+    the detected lag and its correlation, and the fusion weight."""
+    name: str
+    bias_w: float
+    rms_w: float
+    delay_s: float
+    peak_corr: float
+    weight: float
+
+    def as_dict(self) -> dict:
+        return {"bias_w": self.bias_w, "rms_w": self.rms_w,
+                "delay_s": self.delay_s, "peak_corr": self.peak_corr,
+                "weight": self.weight}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceValidation:
+    """One device group's validation: per-stream rows plus coverage-
+    pattern accounting surfaced as per-slot data-quality flags."""
+    name: str
+    streams: dict              # {sensor name: StreamValidation}
+    mean_disagreement_w: float
+    coverage_counts: dict      # {stream-bitmask pattern: slot count}
+    slot_flags: np.ndarray     # (G,) uint8 of FLAG_* bits per slot
+    quality_flags: tuple       # summary flags for the whole group
+
+    def as_dict(self) -> dict:
+        return {"name": self.name,
+                "streams": {k: v.as_dict()
+                            for k, v in self.streams.items()},
+                "mean_disagreement_w": self.mean_disagreement_w}
+
+
+class ValidationReport:
+    """Typed §V-B report with a dict view for backward compatibility.
+
+    ``report.devices`` is the typed access path
+    (list[DeviceValidation]); ``report["devices"]`` (and ``as_dict()``)
+    reproduce the legacy nested-dict shape exactly.
+    """
+
+    def __init__(self, devices):
+        self.devices = list(devices)
+        self._dict = {"devices": [d.as_dict() for d in self.devices]}
+
+    def as_dict(self) -> dict:
+        return self._dict
+
+    def __getitem__(self, key):
+        return self._dict[key]
+
+    def __iter__(self):
+        return iter(self._dict)
+
+    def __len__(self):
+        return len(self._dict)
+
+    def keys(self):
+        return self._dict.keys()
+
+    def __contains__(self, key):
+        return key in self._dict
+
+
+def validate_streams(groups, *, disagree_frac: float = 0.25,
+                     partial_frac: float = 0.25,
+                     low_corr: float = 0.2, **kw) -> ValidationReport:
     """The paper's §V-B cross-sensor comparison, per device group.
 
-    Returns {"devices": [{name, streams: {sensor: {bias_w, rms_w,
-    delay_s, peak_corr, weight}}, mean_disagreement_w}]} — the bias /
-    RMS-disagreement / detected-lag table, computed on the delay-
-    corrected common timeline.
+    Returns a :class:`ValidationReport` — typed per-sensor
+    bias/RMS/lag rows plus per-slot coverage-pattern accounting
+    (``slot_flags``/``coverage_counts``) and group-level
+    ``quality_flags`` ("partial_coverage" when more than
+    ``partial_frac`` of covered slots miss a stream,
+    "high_disagreement" when the mean disagreement exceeds
+    ``disagree_frac`` of the mean fused power, "low_peak_corr" when
+    any stream's alignment peak is below ``low_corr``).  Indexing the
+    report (``report["devices"]``) yields the legacy dict shape.
     """
     fused_list = align_and_fuse(groups, **kw)
     devices = []
@@ -270,21 +349,47 @@ def validate_streams(groups, **kw) -> dict:
         for k, name in enumerate(fs.names):
             m = fs.stream_mask[k] & fs.mask
             dev = fs.stream_values[k][m] - fs.watts[m]
-            streams[name] = {
-                "bias_w": float(dev.mean()) if m.any() else float("nan"),
-                "rms_w": float(np.sqrt((dev ** 2).mean()))
-                if m.any() else float("nan"),
-                "delay_s": float(fs.delays[k]),
-                "peak_corr": float(fs.peak_corr[k]),
-                "weight": float(fs.weights[k]),
-            }
-        devices.append({
-            "name": f"device{di}", "streams": streams,
-            "mean_disagreement_w":
-                float(fs.disagreement_w[fs.mask].mean())
-                if fs.mask.any() else float("nan"),
-        })
-    return {"devices": devices}
+            streams[name] = StreamValidation(
+                name=name,
+                bias_w=float(dev.mean()) if m.any() else float("nan"),
+                rms_w=(float(np.sqrt((dev ** 2).mean()))
+                       if m.any() else float("nan")),
+                delay_s=float(fs.delays[k]),
+                peak_corr=float(fs.peak_corr[k]),
+                weight=float(fs.weights[k]))
+        k_n = len(fs.names)
+        sm = np.asarray(fs.stream_mask[:k_n], bool)
+        cnt = sm.sum(axis=0)
+        bits = (1 << np.arange(k_n, dtype=np.int64))[:, None]
+        pattern = (sm * bits).sum(axis=0)
+        pats, pat_counts = np.unique(pattern, return_counts=True)
+        flags = np.zeros(sm.shape[1], np.uint8)
+        flags[cnt == 0] |= FLAG_NO_COVERAGE
+        flags[(cnt > 0) & (cnt < k_n)] |= FLAG_PARTIAL_COVERAGE
+        mean_w = (float(np.abs(fs.watts[fs.mask]).mean())
+                  if fs.mask.any() else 0.0)
+        hi_dis = fs.mask & (fs.disagreement_w
+                            > disagree_frac * max(mean_w, 1e-9))
+        flags[hi_dis] |= FLAG_HIGH_DISAGREEMENT
+        quality = []
+        covered = cnt > 0
+        if covered.any() and (((cnt > 0) & (cnt < k_n)).sum()
+                              > partial_frac * covered.sum()):
+            quality.append("partial_coverage")
+        mean_dis = (float(fs.disagreement_w[fs.mask].mean())
+                    if fs.mask.any() else float("nan"))
+        if fs.mask.any() and mean_dis > disagree_frac * max(mean_w,
+                                                            1e-9):
+            quality.append("high_disagreement")
+        if any(s.peak_corr < low_corr for s in streams.values()):
+            quality.append("low_peak_corr")
+        devices.append(DeviceValidation(
+            name=f"device{di}", streams=streams,
+            mean_disagreement_w=mean_dis,
+            coverage_counts={int(p): int(c)
+                             for p, c in zip(pats, pat_counts)},
+            slot_flags=flags, quality_flags=tuple(quality)))
+    return ValidationReport(devices)
 
 
 def attribute_energy_fused(groups, phases, *, chunk: int = 4096,

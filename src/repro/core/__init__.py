@@ -18,7 +18,8 @@ from repro.core.measurement_model import (SensorSpec, ToolSpec,  # noqa: F401
                                           expected_lag_s)
 from repro.core.power_model import (PiecewisePower, occupancy_power,  # noqa
                                     phase_power, square_wave)
-from repro.core.sensors import NodeFabric, SensorTrace, simulate_sensor  # noqa
+from repro.core.sensors import (NodeFabric, SensorTrace,  # noqa
+                                FaultSpec, inject_fault, simulate_sensor)
 from repro.core.reconstruction import (PowerSeries,  # noqa: F401
                                        delta_e_over_delta_t,
                                        power_trace_series, unwrap_counter)

@@ -5,9 +5,16 @@ unified timebase (``time.perf_counter_ns``), cheap enough to wrap every
 training phase (<1% overhead, measured by benchmarks/bench_overhead.py).
 ``LiveSampler`` is the APAPI analogue: a dedicated thread polling sensors
 asynchronously so instrumentation never blocks application threads.
+
+Both buffers are bounded for 24/7 streaming runs: pass ``max_events`` /
+``max_samples`` to keep only the newest entries (a ring — the OLDEST
+entry is dropped and counted in ``.dropped``), and drain periodically
+with ``flush()``.  ``health.HealthRegistry.track_tracer`` /
+``track_sampler`` export the buffer depth and drop counters.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import threading
@@ -28,13 +35,29 @@ class RegionEvent:
 
 
 class RegionTracer:
-    """Nested region recording with a unified monotonic timebase."""
+    """Nested region recording with a unified monotonic timebase.
 
-    def __init__(self, timebase: Optional[Callable[[], float]] = None):
+    max_events: ring capacity; None (default) keeps every event.  When
+    the ring is full each append evicts the oldest event and increments
+    ``dropped`` — long streaming runs should size the ring to the flush
+    cadence and drain with ``flush()``.
+    """
+
+    def __init__(self, timebase: Optional[Callable[[], float]] = None,
+                 max_events: Optional[int] = None):
         self._now = timebase or (lambda: time.perf_counter_ns() * 1e-9)
-        self.events: list = []
+        self.max_events = max_events
+        self.events: collections.deque = collections.deque()
+        self.dropped = 0
         self._stack: list = []
         self.t0 = self._now()
+
+    def _append(self, ev: RegionEvent) -> None:
+        if (self.max_events is not None
+                and len(self.events) >= self.max_events):
+            self.events.popleft()
+            self.dropped += 1
+        self.events.append(ev)
 
     def now(self) -> float:
         return self._now() - self.t0
@@ -48,18 +71,25 @@ class RegionTracer:
         finally:
             depth = len(self._stack) - 1
             self._stack.pop()
-            self.events.append(
+            self._append(
                 RegionEvent(name, t_s, self.now(), depth, device, step))
 
     def add_region(self, name, t_start, t_end, *, depth=0, device=-1,
                    step=-1):
         """Record an externally-timed region (e.g. replayed traces)."""
-        self.events.append(
+        self._append(
             RegionEvent(name, t_start, t_end, depth, device, step))
+
+    def flush(self) -> list:
+        """Drain and return the buffered events (oldest first); the
+        cumulative ``dropped`` counter is left untouched."""
+        out = list(self.events)
+        self.events.clear()
+        return out
 
     def phases(self, *, depth: Optional[int] = None, name=None):
         """(name, t_start, t_end) tuples, sorted by start time."""
-        evs = self.events
+        evs = list(self.events)
         if depth is not None:
             evs = [e for e in evs if e.depth == depth]
         if name is not None:
@@ -86,18 +116,26 @@ class LiveSampler:
     """Dedicated sampling thread (APAPI analogue): polls ``read_fn`` at a
     requested cadence, recording (t_read, value) without touching the
     application thread.  Used by bench_overhead.py to validate the <1%
-    instrumentation-overhead claim."""
+    instrumentation-overhead claim.
+
+    max_samples: ring capacity; None keeps everything.  A full ring
+    evicts the oldest sample per poll (counted in ``dropped``) so the
+    buffer always holds the newest window; drain with ``flush()``.
+    """
 
     def __init__(self, read_fn: Callable[[float], float],
                  interval_s: float = 1e-3,
-                 timebase: Optional[Callable[[], float]] = None):
+                 timebase: Optional[Callable[[], float]] = None,
+                 max_samples: Optional[int] = None):
         self._read = read_fn
         self._interval = interval_s
         self._now = timebase or (lambda: time.perf_counter_ns() * 1e-9)
         self._stop = threading.Event()
         self._thread = None
-        self.t_read: list = []
-        self.values: list = []
+        self.max_samples = max_samples
+        self.t_read: collections.deque = collections.deque()
+        self.values: collections.deque = collections.deque()
+        self.dropped = 0
 
     def start(self):
         self._stop.clear()
@@ -109,6 +147,11 @@ class LiveSampler:
         nxt = self._now()
         while not self._stop.is_set():
             t = self._now()
+            if (self.max_samples is not None
+                    and len(self.t_read) >= self.max_samples):
+                self.t_read.popleft()
+                self.values.popleft()
+                self.dropped += 1
             self.t_read.append(t)
             self.values.append(self._read(t))
             nxt += self._interval
@@ -117,6 +160,16 @@ class LiveSampler:
                 self._stop.wait(delay)
             else:
                 nxt = self._now()     # fell behind: resync (observed gap)
+
+    def flush(self):
+        """Drain and return (t_read, values) arrays for the buffered
+        samples; the cumulative ``dropped`` counter keeps counting.
+        Safe against the concurrent sampler thread: only the front of
+        the deques is consumed while the thread appends at the back."""
+        n = min(len(self.t_read), len(self.values))
+        t = [self.t_read.popleft() for _ in range(n)]
+        v = [self.values.popleft() for _ in range(n)]
+        return (np.asarray(t, np.float64), np.asarray(v, np.float64))
 
     def stop(self):
         self._stop.set()

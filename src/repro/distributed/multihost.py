@@ -43,6 +43,7 @@ fixed-delay AND tracked).
 from __future__ import annotations
 
 import logging
+import pickle
 import threading
 
 import numpy as np
@@ -342,7 +343,8 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
                                      dtype=np.float32, interpret=None,
                                      use_kernel=None, host: bool = False,
                                      record: bool = False,
-                                     return_pipe: bool = False):
+                                     return_pipe: bool = False,
+                                     health=None, registry=None):
     """Fleet-wide fused per-phase energy, rows sharded across hosts.
 
     The multi-host counterpart of
@@ -371,6 +373,16 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
     corrections exactly, and stays bit-identical for any host←group
     assignment and process count just like the fixed-delay mode
     (``pipe.fleet_delays()`` exposes the shared vector).
+
+    ``health`` (True or a ``health.HealthConfig``) composes the
+    streaming ``SensorHealthStage``: every window's per-sensor residual
+    stats ride the existing framed frontier reduce (one extra
+    fleet-sized block, same round trip), so the quarantine decisions —
+    and hence the fused results they gate — stay bit-identical across
+    process counts and host←group assignments.  Sensor names are
+    allgathered once (tiny pickle) so every host labels the same global
+    rows identically.  ``registry`` is an optional
+    ``health.HealthRegistry`` for telemetry export.
     """
     from repro.core.attribution import PhaseEnergy
     from repro.fleet.pipeline import (StreamingFusedPipeline,
@@ -433,6 +445,25 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
         return ([[] for _ in range(n_global)], None) if return_pipe \
             else [[] for _ in range(n_global)]
     windows = [(a - rows.t0, b - rows.t0) for _, a, b in phases]
+    health_names = None
+    if health:
+        # one tiny pickle allgather so every host labels the same
+        # global rows with the same sensor names (events/metrics then
+        # compare bitwise across hosts and process counts)
+        sizes = [int(s) for s in shard.global_group_sizes]
+        g_off = [0]
+        for s in sizes:
+            g_off.append(g_off[-1] + s)
+        health_names = [f"s{i}" for i in range(g_off[-1])]
+        blob = pickle.dumps((tuple(int(g) for g in shard.group_ids),
+                             [tr.name for tr in flat]))
+        for part in collectives.allgather_bytes(blob):
+            gids, nms = pickle.loads(part)
+            k = 0
+            for gid in gids:
+                for j in range(sizes[gid]):
+                    health_names[g_off[gid] + j] = nms[k]
+                    k += 1
     pipe = StreamingFusedPipeline(
         shard.local_group_sizes, windows, grid_origin=origin,
         grid_step=grid_step, kind_row=rows.kind_row, delays=delays,
@@ -440,7 +471,8 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
         max_lag=max_lag, ema=ema, tail=tail, var_floor=var_floor,
         collectives=collectives, shard=shard, record=record,
         dtype=dtype, interpret=interpret, use_kernel=use_kernel,
-        host=host)
+        host=host, health=health, registry=registry,
+        health_names=health_names)
     span = (collectives.allreduce_min(
                 float(rows.times[:n, 0].astype(np.float64).min())),
             collectives.allreduce_max(

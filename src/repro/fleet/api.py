@@ -103,6 +103,16 @@ def attribute_energy_fused(trace_groups, phases, *, streaming=False,
     the single-host tracker and stay bit-identical across process
     counts, exactly like the fixed-delay mode — see
     ``repro.distributed.multihost``.
+
+    ``health``+``registry`` (streaming only) enable fleet-health
+    observability: ``health=True`` or a ``health.HealthConfig``
+    composes a ``SensorHealthStage`` (rolling per-sensor diagnostics,
+    typed quarantine/recovery events, deterministic fusion masking —
+    all-healthy fleets stay bit-identical to ``health=None``), and a
+    ``health.HealthRegistry`` exports sensor health plus pipeline
+    self-metrics as Prometheus text or JSON; see ``repro.health``.
+    Pass ``return_pipe=True`` to also get the pipeline for event and
+    metrics inspection.
     """
     if kw.get("collectives") is not None:
         assert streaming, \

@@ -67,6 +67,7 @@ import dataclasses
 import functools
 import logging
 import pickle
+import time
 
 import jax
 import numpy as np
@@ -857,6 +858,11 @@ class RegridFuseStage:
                                ssr=np.zeros((self.n_streams,)))
         self._t_first = None
         self._nan = None
+        # optional SensorHealthStage feedback loop: its pending stats
+        # ride _sync's frame (or fold locally), and its quarantine mask
+        # gates the fusion statistics from the NEXT window on
+        self.health = None
+        self.last_frontier = None   # telemetry: emit-frontier lag
 
     def reset(self):
         self._tail.reset()
@@ -877,17 +883,38 @@ class RegridFuseStage:
 
     def _sync(self, value: float, op: str) -> float:
         """Frontier all-reduce; a synced tracker's pending (lag,
-        weight) vectors piggyback on the same frame and are folded into
-        the shared fleet EMA before the value is used."""
+        weight) vectors AND the health stage's pending residual stats
+        piggyback on the same frame — still ONE round trip — and are
+        folded into the shared fleet state before the value is used.
+        The concatenated frame length is identical on every host
+        (both blocks are global-fleet sized), and each element is
+        written by exactly one host, so the left-fold sum stays exact."""
         al = self.align
-        if al is not None and al.synced:
-            pend = al.pending_contribution()
-            value, summed = self.collectives.allreduce_framed(
-                value, pend.ravel(), scalar_op=op)
-            al.fold_fleet(summed.reshape(2, -1))
-            return value
-        return (self.collectives.allreduce_min(value) if op == "min"
-                else self.collectives.allreduce_max(value))
+        hs = self.health
+        pend = (al.pending_contribution()
+                if al is not None and al.synced else None)
+        if pend is None and hs is None:
+            return (self.collectives.allreduce_min(value)
+                    if op == "min"
+                    else self.collectives.allreduce_max(value))
+        blocks = []
+        if pend is not None:
+            blocks.append(pend.ravel())
+        if hs is not None:
+            blocks.append(hs.take_pending().ravel())
+        vec = (np.concatenate(blocks) if len(blocks) > 1
+               else blocks[0])
+        value, summed = self.collectives.allreduce_framed(
+            value, vec, scalar_op=op)
+        off = 0
+        if pend is not None:
+            off = pend.size
+            al.fold_fleet(summed[:off].reshape(2, -1))
+        if hs is not None:
+            # the fleet delay EMA above folded first, so the drift
+            # flag sees this window's shared delays on every host
+            hs.fold(summed[off:])
+        return value
 
     def _emit(self, rows_t, rows_v, t_first, delays, lo: int, hi: int):
         idx = np.arange(lo, hi + 1)
@@ -899,12 +926,23 @@ class RegridFuseStage:
                                  host=self.host)
         n = self.n_streams
         vals, mask = vals[:n], mask[:n]
+        # quarantine feedback: QUARANTINED/RECOVERING rows are dropped
+        # from the fusion statistics (the emitted window keeps the RAW
+        # mask so the health stage can keep scoring them).  All-healthy
+        # fleets skip the masking entirely — the arithmetic below is
+        # then bit-identical to a pipeline without the health stage.
+        hm = None
+        if self.health is not None:
+            hm = self.health.local_mask()
+            if hm.all():
+                hm = None
+        stat_mask = mask if hm is None else (mask & hm[:, None])
         # fusion statistics: per-slot cross-sensor mean within each group
         flo = 0
         for k in self.group_sizes:
             fhi = flo + k
             v = vals[flo:fhi].astype(np.float64)
-            m = mask[flo:fhi]
+            m = stat_mask[flo:fhi]
             cnt = m.sum(axis=0)
             m0 = (v * m).sum(axis=0) / np.maximum(cnt, 1.0)
             resid = (v - m0[None, :]) * m
@@ -931,6 +969,12 @@ class RegridFuseStage:
             # order — and hence the fused energies — assignment-stable);
             # a synced tracker's (lag, weight) pairs ride the same frame
             frontier = self._sync(frontier, "min")
+        elif self.health is not None:
+            # single host: fold at the same cadence as the synced path
+            # (once per update), so window w's stats gate the masks
+            # from window w+1 on — exactly as in the multi-host fold
+            self.health.fold(self.health.take_pending())
+        self.last_frontier = frontier
         # a safety margin of 1% of a step keeps float32-rounded queries
         # strictly inside every row's closed span (re-emitted exactly at
         # flush time where the span bound is final)
@@ -962,13 +1006,19 @@ class RegridFuseStage:
                 # cover through the globally LAST row (hosts whose rows
                 # end early mask off, exactly as in the batch regrid)
                 t_end = self._sync(t_end, "max")
-        elif (self.collectives is not None and self.align is not None
-              and self.align.synced):
+            elif self.health is not None:
+                self.health.fold(self.health.take_pending())
+        elif (self.collectives is not None
+              and (self.health is not None
+                   or (self.align is not None and self.align.synced))):
             # explicit t_end (identical on every host): the reduce is a
             # scalar no-op but still flushes any (lag, weight) pairs a
-            # final-window hop left pending, keeping the shared fleet
-            # EMA current — and identical — on every host
+            # final-window hop left pending — and the health stage's
+            # last stats block — keeping the shared fleet state
+            # current, and identical, on every host
             t_end = self._sync(float(t_end), "max")
+        elif self.health is not None:
+            self.health.fold(self.health.take_pending())
         hi = int(np.floor((t_end - self.origin) / self.step + 1e-9))
         if hi < self.carry.next_slot:
             return None
@@ -1328,17 +1378,33 @@ class StreamPipeline:
     window's journey — e.g. the regrid frontier did not advance).
     ``finalize`` flushes every stage in order, routing whatever it still
     held through the remainder of the chain.
+
+    Self-metrics: per-stage cumulative wall time and the processed
+    window count are kept in ``stage_wall_s``/``windows`` (two
+    ``perf_counter`` calls per stage per window — noise next to any
+    stage's kernel work); ``attach_registry`` exposes them through a
+    ``health.HealthRegistry``.
     """
 
     def __init__(self, *stages):
         self.stages = list(stages)
+        self.stage_wall_s = {type(st).__name__: 0.0 for st in stages}
+        self.windows = 0
+
+    def _timed(self, st, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        self.stage_wall_s[type(st).__name__] += time.perf_counter() - t0
+        return out
 
     def update(self, times, values, valid=None):
-        out = self.stages[0].update(times, values, valid)
+        self.windows += 1
+        st0 = self.stages[0]
+        out = self._timed(st0, st0.update, times, values, valid)
         for st in self.stages[1:]:
             if out is None:
                 break
-            out = st.update(out)
+            out = self._timed(st, st.update, out)
         return self
 
     def finalize(self, t_end: float = None):
@@ -1346,16 +1412,31 @@ class StreamPipeline:
             flush = getattr(st, "flush", None)
             if flush is None:
                 continue
-            out = flush(t_end)
+            out = self._timed(st, flush, t_end)
             for st2 in self.stages[i + 1:]:
                 if out is None:
                     break
-                out = st2.update(out)
+                out = self._timed(st2, st2.update, out)
         return self
+
+    def attach_registry(self, registry) -> None:
+        from repro.health.registry import Metric
+
+        def _fn():
+            return [
+                Metric("stage_wall_seconds", dict(self.stage_wall_s),
+                       kind="counter", label="stage"),
+                Metric("pipeline_windows_total", float(self.windows),
+                       kind="counter"),
+            ]
+        registry.register_source("pipeline", _fn)
 
     def reset(self):
         for st in self.stages:
             st.reset()
+        self.stage_wall_s = {type(st).__name__: 0.0
+                             for st in self.stages}
+        self.windows = 0
         return self
 
 
@@ -1576,7 +1657,8 @@ class StreamingFusedPipeline:
                  ema: float = 0.5, min_corr: float = 0.2, tail: int = 256,
                  var_floor: float = 0.25, collectives=None, shard=None,
                  record: bool = False, dtype=np.float32,
-                 interpret=None, use_kernel=None, host: bool = False):
+                 interpret=None, use_kernel=None, host: bool = False,
+                 health=None, registry=None, health_names=None):
         self.group_sizes = list(group_sizes)
         self.collectives = collectives
         self.shard = shard
@@ -1624,12 +1706,56 @@ class StreamingFusedPipeline:
                                              self.fuse,
                                              collectives=collectives,
                                              shard=shard)
+        self.health_stage = None
+        if health is not None and health is not False:
+            # lazy import: repro.health depends only on core/, so the
+            # fleet <-> health layers never import-cycle
+            from repro.health.stage import HealthConfig, \
+                SensorHealthStage
+            cfg = health if isinstance(health, HealthConfig) else None
+            if shard is not None:
+                row_ids = np.asarray(shard.row_ids, np.int64)
+                n_global = int(sum(shard.global_group_sizes))
+            else:
+                row_ids, n_global = None, None
+            self.health_stage = SensorHealthStage(
+                self.group_sizes, cfg, grid_step=grid_step,
+                row_ids=row_ids, n_global=n_global,
+                names=health_names, align=self.align,
+                registry=registry)
+            self.fuse.health = self.health_stage
         stages = [self.ingest, self.reconstruct]
         if self.align is not None:
             stages.append(self.align)
-        stages += [self.fuse, self.attr]
+        stages += [self.fuse]
+        if self.health_stage is not None:
+            stages.append(self.health_stage)
+        stages += [self.attr]
         self.pipeline = StreamPipeline(*stages)
+        if registry is not None:
+            self.pipeline.attach_registry(registry)
+            self._attach_fuse_metrics(registry)
+            if collectives is not None:
+                registry.track_collectives(collectives)
         self._dtype = dtype
+
+    def _attach_fuse_metrics(self, registry) -> None:
+        from repro.health.registry import Metric
+        fuse = self.fuse
+
+        def _fn():
+            lag = 0.0
+            if fuse.last_frontier is not None:
+                lag = (fuse.last_frontier
+                       - (fuse.origin + fuse.step
+                          * fuse.carry.next_slot))
+            return [
+                Metric("emit_frontier_lag_s", float(lag),
+                       help="closed stream not yet emitted (s)"),
+                Metric("emitted_slots_total",
+                       float(fuse.carry.next_slot), kind="counter"),
+            ]
+        registry.register_source("fuse", _fn)
 
     def update(self, times, values, valid=None):
         t = np.asarray(times, self._dtype)
@@ -2176,7 +2302,9 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
                                      use_t_measured: bool = True,
                                      dtype=np.float32, interpret=None,
                                      use_kernel=None, host: bool = False,
-                                     engine: str = "windowed") -> list:
+                                     engine: str = "windowed",
+                                     health=None, registry=None,
+                                     return_pipe: bool = False) -> list:
     """Streaming-first counterpart of ``align.attribute_energy_fused``.
 
     trace_groups: [[SensorTrace, ...], ...] — all sensors observing one
@@ -2194,6 +2322,14 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
     replay on the host and executes it as one jitted ``lax.scan``
     (``attribute_totals_fused_scan``) — same results to <= 1e-5,
     several times the throughput (see ``benchmarks/bench_stream.py``).
+
+    health: None/False disables diagnostics (the default — results are
+    then byte-for-byte today's pipeline); True or a
+    ``health.HealthConfig`` composes a ``SensorHealthStage`` between
+    Fuse and PhaseAttribute (windowed engine only).  registry: an
+    optional ``health.HealthRegistry`` for telemetry export.
+    return_pipe: also return the driven pipeline (windowed engine), for
+    health-event/metrics inspection: ``(out, pipe)``.
     """
     from repro.core.attribution import PhaseEnergy
     groups = [list(g) for g in trace_groups]
@@ -2227,7 +2363,11 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
         return [[] for _ in groups]
     windows = [(a - rows.t0, b - rows.t0) for _, a, b in phases]
     assert engine in ("windowed", "scan"), engine
+    if health:
+        assert engine == "windowed", \
+            "the health stage composes with the windowed engine only"
     if engine == "scan":
+        assert not return_pipe, "return_pipe needs the windowed engine"
         res = attribute_totals_fused_scan(
             rows, [len(g) for g in groups], windows, grid_origin=origin,
             grid_step=grid_step, t_end=t_end, chunk=chunk, delays=delays,
@@ -2235,6 +2375,7 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
             max_lag=max_lag, ema=ema, var_floor=var_floor,
             interpret=interpret, use_kernel=use_kernel, host=host)
         totals = res.totals
+        pipe = None
     else:
         pipe = StreamingFusedPipeline(
             [len(g) for g in groups], windows, grid_origin=origin,
@@ -2242,7 +2383,8 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
             reference=ref, track=track, window=window, hop=hop,
             max_lag=max_lag, ema=ema, tail=tail, var_floor=var_floor,
             dtype=dtype, interpret=interpret, use_kernel=use_kernel,
-            host=host)
+            host=host, health=health, registry=registry,
+            health_names=[tr.name for tr in flat])
         for t_blk, v_blk in stream_row_windows(rows, chunk):
             pipe.update(t_blk, v_blk)
         pipe.finalize(t_end)
@@ -2254,4 +2396,4 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
             dur = max(b - a, 1e-12)
             row.append(PhaseEnergy(name, a, b, float(e), float(e / dur)))
         out.append(row)
-    return out
+    return (out, pipe) if return_pipe else out

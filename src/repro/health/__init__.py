@@ -1,0 +1,14 @@
+"""Fleet health: streaming diagnostics, quarantine, telemetry export.
+
+The subsystem has three parts: typed events + the per-sensor state
+machine codes (``events``), the pipeline diagnostics stage with its
+deterministic quarantine mask (``stage``), and the pull-based metrics
+registry with Prometheus/JSON export (``registry``).
+"""
+from repro.health.events import (            # noqa: F401
+    HEALTHY, SUSPECT, QUARANTINED, RECOVERING, STATE_NAMES,
+    HealthEvent, write_events_jsonl)
+from repro.health.stage import (             # noqa: F401
+    N_STATS, HealthConfig, SensorHealthStage)
+from repro.health.registry import (          # noqa: F401
+    HealthRegistry, Metric)

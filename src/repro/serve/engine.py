@@ -32,13 +32,16 @@ class Request:
 class ServeEngine:
     def __init__(self, model: Model, params, *, batch_slots=4,
                  max_len=512, tracer: Optional[RegionTracer] = None,
-                 greedy=True):
+                 greedy=True, registry=None):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.tracer = tracer or RegionTracer()
         self.greedy = greedy
+        self.registry = registry
+        if registry is not None:
+            registry.track_tracer("serve", self.tracer)
         self.cache = model.init_cache(batch_slots, max_len)
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
@@ -96,7 +99,8 @@ class ServeEngine:
                          t_shift=0.0, use_fleet=True, chunk=1024,
                          fuse=False, reference=None, streaming=False,
                          track=None, delays=None, shard=None,
-                         collectives=None, engine="windowed"):
+                         collectives=None, engine="windowed",
+                         health=None, registry=None):
         """Per-phase energy for the engine's recorded serving phases.
 
         traces: {name: SensorTrace} (e.g. ``NodeFabric.sample_all``) or a
@@ -130,7 +134,13 @@ class ServeEngine:
         (single-host streaming only) executes the replay as one jitted
         ``lax.scan`` (``fleet.pipeline.attribute_totals_fused_scan``) —
         same energies to <= 1e-5, several times the throughput.
+        ``health`` (streaming only) composes the
+        ``repro.health.SensorHealthStage`` fleet-health diagnostics
+        into the pipeline (``True`` or a ``HealthConfig``);
+        ``registry`` (a ``HealthRegistry``, defaulting to the engine's
+        own) collects the health + pipeline self-metrics for export.
         """
+        reg = registry if registry is not None else self.registry
         phases = [(n, a + t_shift, b + t_shift)
                   for n, a, b in self.tracer.phases(depth=depth)]
         if fuse:
@@ -148,7 +158,7 @@ class ServeEngine:
                     list(groups.values()), phases, shard=shard,
                     collectives=collectives, corrections=corrections,
                     reference=reference, track=track, delays=delays,
-                    chunk=chunk)
+                    chunk=chunk, health=health, registry=reg)
                 rows = [all_rows[g] for g in shard.group_ids]
             elif streaming:
                 from repro.fleet.pipeline import (
@@ -157,7 +167,7 @@ class ServeEngine:
                     list(groups.values()), phases,
                     corrections=corrections, reference=reference,
                     track=track, delays=delays, chunk=chunk,
-                    engine=engine)
+                    engine=engine, health=health, registry=reg)
             else:
                 rows = attribute_energy_fused(list(groups.values()),
                                               phases,

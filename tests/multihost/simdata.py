@@ -10,21 +10,25 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import ToolSpec, simulate_sensor, square_wave
+from repro.core import (ToolSpec, inject_fault, simulate_sensor,
+                        square_wave)
 from repro.core.measurement_model import SensorSpec
 
 SENSORS_PER_DEVICE = 2
 
 
 def sim_groups(n_devices: int, seed: int = 0, span_s: float = 2.5,
-               noise: float = 3.0, drift_ppm: float = 0.0):
+               noise: float = 3.0, drift_ppm: float = 0.0,
+               faults=None):
     """Per device: a wrapping energy counter + a noisy power sensor with
     distinct configured delays (the delay spread creates emit-frontier
     skew between hosts).  ``drift_ppm`` additionally stretches every
     sensor's clock (the PR-3 ``SensorSpec.drift_ppm`` ground truth), so
     the true lag moves during the run — the regime only ONLINE delay
     tracking can follow, used by the synchronized-tracking parity
-    tests."""
+    tests.  ``faults``: optional {sensor name: FaultSpec} — applied by
+    ``core.inject_fault`` after simulation (a pure function, so every
+    spawned worker regenerates identical faulty traces)."""
     truth = square_wave(span_s / 4.0, 3, lead_s=span_s / 8,
                         tail_s=span_s / 8)
     tool = ToolSpec(0.9e-3)
@@ -39,9 +43,13 @@ def sim_groups(n_devices: int, seed: int = 0, span_s: float = 2.5,
                        delay_s=0.011 + 0.003 * (d % 3),
                        drift_ppm=drift_ppm),
         ]
-        groups.append([simulate_sensor(sp, tool, truth,
-                                       seed=seed + 31 * d + i)
-                       for i, sp in enumerate(specs)])
+        traces = [simulate_sensor(sp, tool, truth,
+                                  seed=seed + 31 * d + i)
+                  for i, sp in enumerate(specs)]
+        if faults:
+            traces = [inject_fault(tr, faults[tr.name])
+                      if tr.name in faults else tr for tr in traces]
+        groups.append(traces)
         delays.extend(sp.delay_s for sp in specs)
     return truth, groups, np.asarray(delays, np.float64)
 

@@ -1,0 +1,130 @@
+"""Multi-host fleet health: quarantine decisions ride the framed
+frontier reduce, so every host folds IDENTICAL reduced statistics and
+the event stream / state machine / masked energies are bit-identical
+across process counts and host<-group assignments.
+
+Workers re-simulate the same faulty fleet (``inject_fault`` is a pure
+function of the clean trace), attribute with the health stage enabled,
+and return (energies, transition tuples, final states); the parent
+compares everything bitwise across 1/2/4 processes.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from multihost.harness import run_multihost
+from multihost.simdata import (energy_matrix, shared_grid_and_phases,
+                               sim_groups)
+
+
+def _proc_counts():
+    cap = int(os.environ.get("REPRO_MH_PROCS", "4"))
+    return [p for p in (1, 2, 4) if p <= cap]
+
+
+def _health_worker(n_devices, chunk, faults, cfg_kw):
+    import jax
+    from multihost.simdata import (energy_matrix, shared_grid_and_phases,
+                                   sim_groups)
+    from repro.distributed.multihost import (
+        CoordinatorCollectives, attribute_energy_fused_multihost)
+    from repro.fleet import assign_groups
+    from repro.health import HealthConfig, HealthRegistry
+    truth, groups, delays = sim_groups(n_devices, faults=faults)
+    grid, phases = shared_grid_and_phases(groups)
+    sh = assign_groups([len(g) for g in groups], jax.process_count(),
+                       jax.process_index())
+    coll = CoordinatorCollectives.from_jax()
+    local = [groups[g] for g in sh.group_ids]
+    reg = HealthRegistry()
+    res, pipe = attribute_energy_fused_multihost(
+        local, phases, shard=sh, collectives=coll, grid=grid,
+        delays=sh.take_rows(delays), chunk=chunk,
+        health=HealthConfig(**cfg_kw), registry=reg,
+        return_pipe=True)
+    hs = pipe.health_stage
+    trans = tuple((e.window, float(e.t), e.name, e.state_from,
+                   e.state_to, tuple(e.flags)) for e in hs.events)
+    snap = reg.json_snapshot()
+    return (energy_matrix(res), trans, hs.state.tolist(),
+            list(hs.names), hs.windows, snap["quarantined_sensors"],
+            snap.get("wire_frames", 0.0))
+
+
+def _plain_worker(n_devices, chunk):
+    import jax
+    from multihost.simdata import (energy_matrix, shared_grid_and_phases,
+                                   sim_groups)
+    from repro.distributed.multihost import (
+        CoordinatorCollectives, attribute_energy_fused_multihost)
+    from repro.fleet import assign_groups
+    truth, groups, delays = sim_groups(n_devices)
+    grid, phases = shared_grid_and_phases(groups)
+    sh = assign_groups([len(g) for g in groups], jax.process_count(),
+                       jax.process_index())
+    coll = CoordinatorCollectives.from_jax()
+    local = [groups[g] for g in sh.group_ids]
+    res = attribute_energy_fused_multihost(
+        local, phases, shard=sh, collectives=coll, grid=grid,
+        delays=sh.take_rows(delays), chunk=chunk)
+    return energy_matrix(res)
+
+
+CFG_KW = dict(suspect_after=1, quarantine_after=1, recover_after=1,
+              min_slots=8, bias_limit_w=15.0, rms_limit_w=60.0)
+
+
+def test_health_transitions_bit_identical_across_hosts():
+    """2 processes, ragged 3-group fleet, one stuck power sensor: both
+    hosts see the SAME events, states and masked fleet energies."""
+    from repro.core import FaultSpec
+    faults = {"d1_power": FaultSpec("stuck", 1.0)}
+    out = run_multihost(_health_worker, 2, args=(3, 257, faults, CFG_KW))
+    e0, tr0, st0, names0, w0, q0, _ = out[0]
+    e1, tr1, st1, names1, w1, q1, _ = out[1]
+    np.testing.assert_array_equal(e0, e1)         # BITWISE
+    assert tr0 == tr1 and st0 == st1 and w0 == w1
+    assert names0 == names1
+    assert tr0, "the stuck sensor must produce transitions"
+    assert st0[names0.index("d1_power")] == 2     # QUARANTINED
+    assert q0 == q1 == 1.0
+
+
+@pytest.mark.skipif(len(_proc_counts()) < 2,
+                    reason="REPRO_MH_PROCS allows a single count only")
+def test_health_decisions_invariant_to_process_count():
+    """The same faulty fleet through 1/2/4 processes: event streams,
+    final states and energies are identical to the last bit — the
+    ISSUE's quarantine-determinism acceptance bar."""
+    from repro.core import FaultSpec
+    faults = {"d2_power": FaultSpec("step_drift", 0.7, 1.6,
+                                    magnitude_w=40.0)}
+    ref = None
+    for n_procs in _proc_counts():
+        # 5 ragged groups so every host owns >=1 at 4 processes
+        out = run_multihost(_health_worker, n_procs,
+                            args=(5, 257, faults, CFG_KW))
+        for e, tr, st, names, w, q, _ in out:
+            if ref is None:
+                ref = (e, tr, st, names, w)
+                # full lifecycle: quarantined then recovered
+                seq = [(a, b) for _, _, nm, a, b, _ in tr
+                       if nm == "d2_power"]
+                assert (2, 3) in seq and (3, 0) in seq
+            else:
+                np.testing.assert_array_equal(e, ref[0])
+                assert (tr, st, names, w) == ref[1:]
+
+
+def test_all_healthy_multihost_matches_plain_bitwise():
+    """health=None vs health-enabled on a clean fleet: the observability
+    layer must be invisible in the numbers (single-frame overhead only,
+    which the wire stats make visible)."""
+    out = run_multihost(_health_worker, 2, args=(3, 257, None, CFG_KW))
+    e0, tr0, st0, _, _, q0, wire_calls = out[0]
+    assert tr0 == () and set(st0) == {0} and q0 == 0.0
+    assert wire_calls > 0        # stats rode the framed reduce
+    plain = run_multihost(_plain_worker, 2, args=(3, 257))
+    np.testing.assert_array_equal(out[0][0], plain[0])
+    np.testing.assert_array_equal(out[1][0], plain[1])

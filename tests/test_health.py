@@ -1,0 +1,347 @@
+"""Fleet-health observability: the sensor diagnostics stage, fault
+injection, quarantine-aware fusion, telemetry export, and the bounded
+tracing buffers.
+
+The acceptance bars are the ISSUE's: with every sensor healthy the
+health-enabled pipeline is BIT-identical to the plain one; injected
+faults (stuck counter, dropout burst, step drift) are detected within a
+bounded number of fold windows; quarantined sensors recover once the
+fault clears (with an auto-recalibration suggestion); and the registry
+renders both Prometheus text and JSON snapshots.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from multihost.simdata import (energy_matrix, shared_grid_and_phases,
+                               sim_groups)
+from repro.core import FaultSpec, inject_fault
+from repro.fleet.pipeline import attribute_energy_fused_streaming
+from repro.health import (HEALTHY, QUARANTINED, RECOVERING, SUSPECT,
+                          HealthConfig, HealthEvent, HealthRegistry,
+                          SensorHealthStage, write_events_jsonl)
+
+# pacing used by every detection test: one strike to SUSPECT, one more
+# to QUARANTINED, one clean fold to start recovering — tight enough to
+# observe full lifecycles inside an 11-fold (2.5 s / 257-col) replay
+CFG = HealthConfig(suspect_after=1, quarantine_after=1, recover_after=1,
+                   min_slots=8, bias_limit_w=15.0, rms_limit_w=60.0)
+
+
+def _run(faults=None, tail=None, cfg=CFG, registry=None, n_devices=3,
+         chunk=257):
+    truth, groups, delays = sim_groups(n_devices, faults=faults)
+    grid, phases = shared_grid_and_phases(groups)
+    out, pipe = attribute_energy_fused_streaming(
+        groups, phases, grid=grid, delays=delays, chunk=chunk,
+        health=cfg, registry=registry, return_pipe=True, tail=tail)
+    return energy_matrix(out), pipe
+
+
+def _transitions(stage):
+    return [(e.window, e.name, e.state_from, e.state_to)
+            for e in stage.events if e.kind == "transition"]
+
+
+# -- fault injection ------------------------------------------------------
+
+def test_inject_fault_dropout_removes_reads():
+    _, groups, _ = sim_groups(1)
+    tr = groups[0][1]
+    f = inject_fault(tr, FaultSpec("dropout", 0.9, 1.2))
+    assert len(f) < len(tr)
+    assert not np.any((f.t_read >= 0.9) & (f.t_read < 1.2))
+    keep = (tr.t_read < 0.9) | (tr.t_read >= 1.2)
+    np.testing.assert_array_equal(f.value, tr.value[keep])
+
+
+def test_inject_fault_stuck_freezes_value_not_clock():
+    _, groups, _ = sim_groups(1)
+    tr = groups[0][1]
+    f = inject_fault(tr, FaultSpec("stuck", 1.0, 2.0))
+    in_f = (f.t_measured >= 1.0) & (f.t_measured < 2.0)
+    assert in_f.any()
+    assert np.unique(f.value[in_f]).size == 1     # value frozen
+    np.testing.assert_array_equal(f.t_measured, tr.t_measured)
+    np.testing.assert_array_equal(f.value[~in_f], tr.value[~in_f])
+
+
+def test_inject_fault_step_drift_power_and_energy():
+    _, groups, _ = sim_groups(1)
+    en, pw = groups[0]
+    fp = inject_fault(pw, FaultSpec("step_drift", 1.0,
+                                    magnitude_w=40.0))
+    in_f = fp.t_measured >= 1.0
+    np.testing.assert_allclose(fp.value[in_f], pw.value[in_f] + 40.0)
+    np.testing.assert_array_equal(fp.value[~in_f], pw.value[~in_f])
+    fe = inject_fault(en, FaultSpec("step_drift", 1.0,
+                                    magnitude_w=40.0))
+    d = fe.value - en.value                       # joules accumulate
+    np.testing.assert_allclose(
+        d, 40.0 * np.clip(en.t_measured - 1.0, 0.0, None))
+
+
+def test_inject_fault_unknown_kind_raises():
+    _, groups, _ = sim_groups(1)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        inject_fault(groups[0][0], FaultSpec("melt", 0.0))
+
+
+# -- the tentpole: all-healthy bit-identity -------------------------------
+
+def test_all_healthy_bit_identical_to_plain_pipeline():
+    truth, groups, delays = sim_groups(3)
+    grid, phases = shared_grid_and_phases(groups)
+    plain = energy_matrix(attribute_energy_fused_streaming(
+        groups, phases, grid=grid, delays=delays, chunk=257))
+    reg = HealthRegistry()
+    e, pipe = _run(registry=reg)
+    np.testing.assert_array_equal(e, plain)       # BITWISE
+    hs = pipe.health_stage
+    assert hs.windows > 0 and not hs.events
+    assert np.all(hs.state == HEALTHY)
+    snap = reg.json_snapshot()
+    assert snap["quarantined_sensors"] == 0.0
+    assert snap["health_windows_total"] == float(hs.windows)
+    assert snap["pipeline_windows_total"] > 0
+    assert set(snap["sensor_state"]) == set(hs.names)
+
+
+# -- detection latency + transitions per fault kind -----------------------
+
+def test_stuck_power_sensor_quarantined_within_two_windows():
+    e, pipe = _run({"d1_power": FaultSpec("stuck", 1.0)})
+    hs = pipe.health_stage
+    tr = [t for t in _transitions(hs) if t[1] == "d1_power"]
+    # fault at t=1.0 first becomes statistically visible in the fold
+    # covering it (w5, t in [1.02, 1.27]); quarantine <= 2 folds later
+    assert tr[0][2:] == (HEALTHY, SUSPECT) and tr[0][0] <= 6
+    assert (tr[0][0], "d1_power", SUSPECT, QUARANTINED) in [
+        (t[0] - 1, t[1], t[2], t[3]) for t in tr]
+    assert hs.state[hs.names.index("d1_power")] == QUARANTINED
+    # the quarantined sensor is masked out of fusion
+    assert not hs.fusion_mask()[hs.names.index("d1_power")]
+
+
+def test_dropout_burst_flagged_as_dropout_and_recovers():
+    e, pipe = _run({"d1_power": FaultSpec("dropout", 0.9, 1.2)},
+                   tail=1024)
+    hs = pipe.health_stage
+    evs = [ev for ev in hs.events if ev.name == "d1_power"]
+    assert evs and evs[0].state_to == SUSPECT
+    assert "dropout" in evs[0].flags
+    assert evs[0].window <= 6        # burst ends t=1.2; fold w6 covers it
+    # one flagged fold only -> clean streak returns it to HEALTHY
+    assert hs.state[hs.names.index("d1_power")] == HEALTHY
+
+
+def test_step_drift_quarantines_group_with_bias_flag():
+    e, pipe = _run({"d2_power": FaultSpec("step_drift", 1.0,
+                                          magnitude_w=40.0)})
+    hs = pipe.health_stage
+    by = {}
+    for ev in hs.events:
+        by.setdefault(ev.name, []).append(ev)
+    # a 2-member group cannot tell which sensor stepped: both flagged
+    for nm in ("d2_power", "d2_energy"):
+        assert [ev.state_to for ev in by[nm]
+                if ev.kind == "transition"] == [SUSPECT, QUARANTINED]
+        assert "bias" in by[nm][0].flags
+        assert by[nm][0].window <= 6
+    assert not any(n.startswith(("d0", "d1")) for n in by)
+
+
+def test_stuck_energy_counter_detected():
+    e, pipe = _run({"d0_energy": FaultSpec("stuck", 1.2)})
+    hs = pipe.health_stage
+    i = hs.names.index("d0_energy")
+    assert hs.state[i] == QUARANTINED
+    evs = [ev for ev in hs.events if ev.name == "d0_energy"]
+    assert evs[0].window <= 7 and evs[0].state_to == SUSPECT
+
+
+def test_bounded_fault_full_recovery_cycle_with_recalibration():
+    e, pipe = _run({"d2_power": FaultSpec("step_drift", 0.7, 1.6,
+                                          magnitude_w=40.0)})
+    hs = pipe.health_stage
+    seq = [(t[2], t[3]) for t in _transitions(hs)
+           if t[1] == "d2_power"]
+    assert seq == [(HEALTHY, SUSPECT), (SUSPECT, QUARANTINED),
+                   (QUARANTINED, RECOVERING), (RECOVERING, HEALTHY)]
+    recal = [ev for ev in hs.events if ev.kind == "recalibrate"]
+    assert {ev.name for ev in recal} == {"d2_energy", "d2_power"}
+    off = pipe.health_stage.suggested_corrections().offsets_w
+    # the 2-member group splits the +40 W step symmetrically
+    assert off["d2_power"] > 1.0
+    np.testing.assert_allclose(off["d2_power"], -off["d2_energy"])
+    assert np.all(hs.state == HEALTHY)
+
+
+def test_quarantine_changes_fused_energy():
+    """Masking a faulty sensor out of fusion must actually change the
+    attributed energy of its device (and leave other devices alone)."""
+    faults = {"d2_power": FaultSpec("step_drift", 1.0,
+                                    magnitude_w=120.0)}
+    truth, groups, delays = sim_groups(3, faults=faults)
+    grid, phases = shared_grid_and_phases(groups)
+    plain = energy_matrix(attribute_energy_fused_streaming(
+        groups, phases, grid=grid, delays=delays, chunk=257))
+    masked, pipe = _run(faults)
+    assert pipe.health_stage.state.max() >= QUARANTINED
+    assert not np.allclose(plain[2], masked[2])
+    np.testing.assert_array_equal(plain[:2], masked[:2])
+
+
+# -- events: typing, serialization, artifact ------------------------------
+
+def test_health_event_json_roundtrip(tmp_path):
+    ev = HealthEvent(kind="transition", window=3, t=1.5, sensor=2,
+                     name="d1_power", state_from=HEALTHY,
+                     state_to=SUSPECT, flags=("bias",),
+                     detail={"bias_w": 20.0})
+    d = ev.to_json()
+    assert d["state_from"] == "healthy" and d["state_to"] == "suspect"
+    assert d["flags"] == ["bias"]
+    p = tmp_path / "ev.jsonl"
+    assert write_events_jsonl([ev, ev], p) == 2
+    lines = [json.loads(x) for x in p.read_text().splitlines()]
+    assert lines[0] == lines[1] == json.loads(json.dumps(d))
+
+
+def test_health_log_dir_writes_jsonl_artifact(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_HEALTH_LOG_DIR", str(tmp_path))
+    _run({"d0_energy": FaultSpec("stuck", 1.2)})
+    files = list(tmp_path.glob("health-events-*.jsonl"))
+    assert len(files) == 1
+    evs = [json.loads(x) for x in files[0].read_text().splitlines()]
+    assert evs and all(
+        {"kind", "window", "t", "name", "state_from", "state_to",
+         "flags"} <= set(e) for e in evs)
+    assert any(e["name"] == "d0_energy" for e in evs)
+
+
+# -- stage unit behavior --------------------------------------------------
+
+def test_stage_fold_ignores_sparse_windows():
+    hs = SensorHealthStage([2], HealthConfig(min_slots=8),
+                           grid_step=1e-3)
+    st = np.zeros((11, 2))
+    st[1] = 4.0                     # n_expected < min_slots
+    hs.fold(st.ravel())
+    assert hs.windows == 1 and not hs.events
+    assert np.all(hs.state == HEALTHY)
+
+
+def test_stage_local_names_placed_at_global_rows():
+    hs = SensorHealthStage([2], grid_step=1e-3, row_ids=[4, 5],
+                           n_global=8, names=["a", "b"])
+    assert hs.names[4:6] == ["a", "b"]
+    assert hs.names[0] == "s0"
+    assert hs.local_mask().shape == (2,)
+    assert hs.fusion_mask().shape == (8,)
+
+
+# -- telemetry registry ---------------------------------------------------
+
+def test_registry_prometheus_text_and_json():
+    reg = HealthRegistry(namespace="repro")
+    reg.set_gauge("answer", 42.0)
+    reg.inc("requests_total", 3)
+    from repro.health import Metric
+    reg.register_source("x", lambda: [
+        Metric("per_thing", {"a": 1.0, "b": 2.5}, label="thing",
+               help="things per thing")])
+    text = reg.prometheus_text()
+    assert '# HELP repro_per_thing things per thing' in text
+    assert '# TYPE repro_per_thing gauge' in text
+    assert 'repro_per_thing{thing="a"} 1' in text
+    assert 'repro_per_thing{thing="b"} 2.5' in text
+    assert 'repro_answer 42' in text
+    assert '# TYPE repro_requests_total counter' in text
+    assert text.endswith("\n")
+    snap = reg.json_snapshot()
+    assert snap == {"per_thing": {"a": 1.0, "b": 2.5},
+                    "answer": 42.0, "requests_total": 3.0}
+
+
+def test_registry_tracks_tracer_and_sampler_drops():
+    from repro.core.tracing import LiveSampler, RegionTracer
+    reg = HealthRegistry()
+    tr = RegionTracer(max_events=2)
+    reg.track_tracer("serve", tr)
+    for k in range(5):
+        tr.add_region(f"r{k}", float(k), k + 0.5)
+    assert len(tr.events) == 2 and tr.dropped == 3
+    sm = LiveSampler(lambda t: 1.0, max_samples=3)
+    reg.track_sampler("node", sm)
+    snap = reg.json_snapshot()
+    assert snap["tracer_events"] == {"serve": 2.0}
+    assert snap["tracer_dropped_total"] == {"serve": 3.0}
+    assert snap["sampler_samples"] == {"node": 0.0}
+    evs = tr.flush()
+    assert [e.name for e in evs] == ["r3", "r4"]
+    assert not tr.events and tr.dropped == 3      # drops are cumulative
+
+
+def test_live_sampler_ring_and_flush():
+    import itertools
+    from repro.core.tracing import LiveSampler
+    clock = itertools.count()
+    sm = LiveSampler(lambda t: 2.0 * t, interval_s=0.0,
+                     timebase=lambda: float(next(clock)),
+                     max_samples=4)
+    # drive the poll loop inline (no thread): emulate _run iterations
+    for _ in range(7):
+        t = float(next(clock))
+        if len(sm.t_read) >= sm.max_samples:
+            sm.t_read.popleft()
+            sm.values.popleft()
+            sm.dropped += 1
+        sm.t_read.append(t)
+        sm.values.append(2.0 * t)
+    assert sm.dropped == 3 and len(sm.t_read) == 4
+    t, v = sm.flush()
+    assert t.shape == (4,)
+    np.testing.assert_allclose(v, 2.0 * t)
+    assert len(sm.t_read) == 0
+
+
+def test_pipeline_self_metrics_exported():
+    reg = HealthRegistry()
+    _run(registry=reg)
+    snap = reg.json_snapshot()
+    stages = set(snap["stage_wall_seconds"])
+    assert {"RegridFuseStage", "SensorHealthStage",
+            "FusedPhaseAttributeStage"} <= stages
+    assert all(v >= 0.0 for v in snap["stage_wall_seconds"].values())
+    assert snap["emitted_slots_total"] > 0
+    assert "emit_frontier_lag_s" in snap
+
+
+# -- typed validation report (satellite 1) --------------------------------
+
+def test_validation_report_typed_and_legacy_views():
+    from repro.align import (ValidationReport, group_traces_by_device,
+                             validate_streams)
+    from repro.core import NodeFabric, square_wave
+    truth = square_wave(0.5, 2, lead_s=0.25, tail_s=0.25)
+    fab = NodeFabric([truth] * 2)
+    groups = list(group_traces_by_device(fab.sample_all()).values())
+    rep = validate_streams(groups, reference=truth)
+    assert isinstance(rep, ValidationReport)
+    assert len(rep.devices) == 2
+    dev = rep.devices[0]
+    st = dev.streams["chip0_energy"]
+    assert np.isfinite(st.bias_w) and np.isfinite(st.rms_w)
+    assert 0.0 <= st.weight <= 1.0
+    assert dev.slot_flags.dtype == np.uint8
+    assert sum(dev.coverage_counts.values()) == dev.slot_flags.size
+    assert all(f in ("partial_coverage", "high_disagreement",
+                     "low_peak_corr") for f in dev.quality_flags)
+    # the legacy dict view matches the typed one exactly
+    legacy = rep["devices"][0]
+    assert legacy["streams"]["chip0_energy"]["bias_w"] == st.bias_w
+    assert legacy["mean_disagreement_w"] == dev.mean_disagreement_w
+    assert "devices" in rep and list(rep.keys()) == ["devices"]

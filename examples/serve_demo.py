@@ -239,6 +239,18 @@ def main():
         line = "  ".join(f"{p.phase} {p.energy_j:7.2f} J" for p in row)
         print(f"  {dev}: {line}")
 
+    # ---- per-request energy bills (continuous-batching metering) ------
+    report = engine.attribute_requests(traces, t_shift=lead,
+                                       reference=truth, track=False)
+    print("\nper-request energy (token-weighted occupancy split):")
+    for r in report.requests:
+        print(f"  rid {r.rid}: {r.energy_j:8.2f} J over {r.tokens:3d} "
+              f"tokens = {r.j_per_token:6.2f} J/tok  "
+              f"(TTFT {r.ttft_s * 1e3:6.1f} ms)")
+    pct = report.percentiles()["j_per_request"]
+    print(f"  p50/p90/p99 J/request: {pct['p50']:.1f} / {pct['p90']:.1f}"
+          f" / {pct['p99']:.1f}")
+
     # same numbers through the streaming stage pipeline (replayed in
     # chunks, O(fleet x chunk) memory, delays tracked on windows)
     fused_stream = engine.attribute_phases(traces, t_shift=lead,

@@ -32,6 +32,7 @@ class RegionEvent:
     depth: int
     device: int = -1     # -1 = host region
     step: int = -1
+    slot: int = -1       # -1 = engine-global (serve: batch slot id)
 
 
 class RegionTracer:
@@ -63,7 +64,8 @@ class RegionTracer:
         return self._now() - self.t0
 
     @contextlib.contextmanager
-    def region(self, name: str, *, device: int = -1, step: int = -1):
+    def region(self, name: str, *, device: int = -1, step: int = -1,
+               slot: int = -1):
         t_s = self.now()
         self._stack.append(name)
         try:
@@ -71,14 +73,14 @@ class RegionTracer:
         finally:
             depth = len(self._stack) - 1
             self._stack.pop()
-            self._append(
-                RegionEvent(name, t_s, self.now(), depth, device, step))
+            self._append(RegionEvent(name, t_s, self.now(), depth,
+                                     device, step, slot))
 
     def add_region(self, name, t_start, t_end, *, depth=0, device=-1,
-                   step=-1):
+                   step=-1, slot=-1):
         """Record an externally-timed region (e.g. replayed traces)."""
         self._append(
-            RegionEvent(name, t_start, t_end, depth, device, step))
+            RegionEvent(name, t_start, t_end, depth, device, step, slot))
 
     def flush(self) -> list:
         """Drain and return the buffered events (oldest first); the
@@ -87,13 +89,20 @@ class RegionTracer:
         self.events.clear()
         return out
 
-    def phases(self, *, depth: Optional[int] = None, name=None):
-        """(name, t_start, t_end) tuples, sorted by start time."""
+    def phases(self, *, depth: Optional[int] = None, name=None,
+               slot: Optional[int] = None):
+        """(name, t_start, t_end) tuples, sorted by start time.
+
+        ``slot=`` filters to one serve-engine batch slot (slot-scoped
+        regions carry the slot id; engine-global regions are slot=-1).
+        """
         evs = list(self.events)
         if depth is not None:
             evs = [e for e in evs if e.depth == depth]
         if name is not None:
             evs = [e for e in evs if e.name == name]
+        if slot is not None:
+            evs = [e for e in evs if e.slot == slot]
         return sorted(((e.name, e.t_start, e.t_end) for e in evs),
                       key=lambda x: x[1])
 
@@ -109,6 +118,7 @@ class RegionTracer:
             "depth": np.asarray([e.depth for e in ev], np.int32),
             "device": np.asarray([e.device for e in ev], np.int32),
             "step": np.asarray([e.step for e in ev], np.int32),
+            "slot": np.asarray([e.slot for e in ev], np.int32),
         }
 
 

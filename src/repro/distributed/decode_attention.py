@@ -36,7 +36,9 @@ def _partial_attend(q, k, v, valid):
 def decode_attention(q, ck, cv, pos, mesh, *, window=0, logit_cap=0.0,
                      seq_axis="model", dp_axes=("pod", "data")):
     """q: (B,1,Hq,D); ck/cv: (B,Smax,Hkv,D) seq-sharded on `seq_axis`;
-    pos: scalar — current write position (entries <= pos are valid).
+    pos: scalar — current write position (entries <= pos are valid) — or
+    a (B,) vector of per-row positions (continuous-batching slots, where
+    every batch row decodes at its own sequence offset).
 
     Note: logit softcap is applied per-score before max/sum, matching the
     jnp oracle (tanh is monotonic so the online combine stays exact).
@@ -59,9 +61,14 @@ def decode_attention(q, ck, cv, pos, mesh, *, window=0, logit_cap=0.0,
         s_loc = k.shape[1]
         base = lax.axis_index(seq_axis) * s_loc if seq_ok else 0
         slots = base + jnp.arange(s_loc)
-        valid = slots <= pos
-        if window:
-            valid &= slots > pos - window
+        if jnp.ndim(pos) == 1:          # per-row positions: (B,) x (Sl,)
+            valid = slots[None, :] <= pos[:, None]
+            if window:
+                valid &= slots[None, :] > (pos - window)[:, None]
+        else:
+            valid = slots <= pos
+            if window:
+                valid &= slots > pos - window
         valid = jnp.broadcast_to(valid, (k.shape[0], s_loc))
         q3 = qq[:, 0]
         if logit_cap:

@@ -1201,6 +1201,95 @@ class FusedPhaseAttributeStage:
         return out
 
 
+# ---------------------------------------------------------------------------
+# Stage 5b: per-request metering (token-weighted occupancy split)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SlotSegment:
+    """One constant-occupancy interval of a serve engine's timeline.
+
+    ``rids``/``tokens`` list the requests concurrently active in
+    ``[t_lo, t_hi)`` and the token weight each contributed (prompt
+    length for prefill segments, decoded steps for decode segments).
+    Segment boundaries fall on every admission/eviction, so occupancy
+    is constant inside a segment and the union of segments tiles the
+    engine's depth-0 phases exactly — which is what makes per-request
+    energies conserve against the per-phase totals.
+    """
+    t_lo: float
+    t_hi: float
+    rids: tuple
+    tokens: tuple
+    kind: str = "decode"
+
+    def shifted(self, dt: float) -> "SlotSegment":
+        return dataclasses.replace(self, t_lo=self.t_lo + dt,
+                                   t_hi=self.t_hi + dt)
+
+
+class MeteringStage(FusedPhaseAttributeStage):
+    """Fused window energies -> per-REQUEST energies.
+
+    A pass-through sibling of ``FusedPhaseAttributeStage``: the phase
+    table is the engine's slot-segment schedule (one row per constant-
+    occupancy interval), accumulated with the same per-(device,
+    segment, coverage-pattern, stream) float64 integrals and finalized
+    with the same deferred inverse-variance weights.  Each segment's
+    energy is then split across the requests active in it by
+    token-weighted occupancy.
+
+    Determinism rule (mirrors the fold-order contract): segments
+    integrate in time order, shares within a segment fold in ascending
+    request-id order, and every accumulation is an exact float64 left
+    fold — per-request energies are bit-identical under any
+    slot-assignment permutation (and any multihost layout upstream,
+    which never re-associates device-local sums).  Conservation is by
+    construction: shares sum to 1 per segment, so per-request energies
+    sum to the segment (= phase) totals to float64 round-off, well
+    inside the 1e-5 gate.
+    """
+
+    def __init__(self, segments, group_sizes, fuse: RegridFuseStage, *,
+                 collectives=None, shard=None):
+        segs = sorted(segments,
+                      key=lambda s: (s.t_lo, s.t_hi, tuple(sorted(s.rids))))
+        self.segments = segs
+        super().__init__([(s.t_lo, s.t_hi) for s in segs], group_sizes,
+                         fuse, collectives=collectives, shard=shard)
+
+    def update(self, gw: GriddedWindow):
+        super().update(gw)
+        return gw              # pass-through: PhaseAttribute still runs
+
+    def segment_totals(self) -> np.ndarray:
+        """(n_devices, n_segments) fused joules per slot segment."""
+        return self.totals()
+
+    def request_energies(self) -> dict:
+        """{rid: (n_devices,) float64 joules}, token-weighted split."""
+        seg_e = self.segment_totals()
+        d = seg_e.shape[0]
+        out: dict = {}
+        for j, s in enumerate(self.segments):
+            if not s.rids:
+                continue               # idle interval: nobody to bill
+            # canonicalize to ascending-rid order FIRST so both the
+            # weight-sum fold and the share folds are permutation-proof
+            order = np.argsort(np.asarray(s.rids, np.int64),
+                               kind="stable")
+            w = np.asarray(s.tokens, np.float64)[order]
+            tot = float(w.sum())
+            if tot <= 0.0:             # degenerate: equal split
+                w = np.ones((len(s.rids),), np.float64)
+                tot = float(len(s.rids))
+            for k, idx in enumerate(order):
+                rid = int(s.rids[idx])
+                acc = out.setdefault(rid, np.zeros((d,), np.float64))
+                acc += (w[k] / tot) * seg_e[:, j]
+        return out
+
+
 class PhaseIntegrateStage:
     """Power windows -> (F, P) energies via the phase_integrate kernel
     (the StreamingPhaseAccumulator core)."""
@@ -1658,7 +1747,8 @@ class StreamingFusedPipeline:
                  var_floor: float = 0.25, collectives=None, shard=None,
                  record: bool = False, dtype=np.float32,
                  interpret=None, use_kernel=None, host: bool = False,
-                 health=None, registry=None, health_names=None):
+                 health=None, registry=None, health_names=None,
+                 meter=None):
         self.group_sizes = list(group_sizes)
         self.collectives = collectives
         self.shard = shard
@@ -1724,12 +1814,21 @@ class StreamingFusedPipeline:
                 names=health_names, align=self.align,
                 registry=registry)
             self.fuse.health = self.health_stage
+        self.meter_stage = None
+        if meter:
+            # per-request metering: slot segments as a second phase
+            # table, accumulated in the same pass (see MeteringStage)
+            self.meter_stage = MeteringStage(
+                list(meter), self.group_sizes, self.fuse,
+                collectives=collectives, shard=shard)
         stages = [self.ingest, self.reconstruct]
         if self.align is not None:
             stages.append(self.align)
         stages += [self.fuse]
         if self.health_stage is not None:
             stages.append(self.health_stage)
+        if self.meter_stage is not None:
+            stages.append(self.meter_stage)
         stages += [self.attr]
         self.pipeline = StreamPipeline(*stages)
         if registry is not None:
@@ -1785,6 +1884,13 @@ class StreamingFusedPipeline:
 
     def weights(self) -> list:
         return self.attr.weights()
+
+    def request_energies(self) -> dict:
+        """{rid: (n_devices,) float64 joules} from the metering stage
+        (needs ``meter=`` slot segments at construction)."""
+        assert self.meter_stage is not None, \
+            "request_energies() needs meter= slot segments"
+        return self.meter_stage.request_energies()
 
     def fused_series(self):
         """(grid, watts, mask) for this host's LOCAL devices, from the
@@ -2304,6 +2410,7 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
                                      use_kernel=None, host: bool = False,
                                      engine: str = "windowed",
                                      health=None, registry=None,
+                                     meter=None,
                                      return_pipe: bool = False) -> list:
     """Streaming-first counterpart of ``align.attribute_energy_fused``.
 
@@ -2328,8 +2435,12 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
     ``health.HealthConfig`` composes a ``SensorHealthStage`` between
     Fuse and PhaseAttribute (windowed engine only).  registry: an
     optional ``health.HealthRegistry`` for telemetry export.
+    meter: a list of ``SlotSegment`` (absolute seconds, like phases)
+    composes a ``MeteringStage`` before PhaseAttribute (windowed engine
+    only) — per-request energies via ``pipe.request_energies()`` with
+    ``return_pipe=True``.
     return_pipe: also return the driven pipeline (windowed engine), for
-    health-event/metrics inspection: ``(out, pipe)``.
+    health-event/metrics/metering inspection: ``(out, pipe)``.
     """
     from repro.core.attribution import PhaseEnergy
     groups = [list(g) for g in trace_groups]
@@ -2366,6 +2477,10 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
     if health:
         assert engine == "windowed", \
             "the health stage composes with the windowed engine only"
+    if meter:
+        assert engine == "windowed", \
+            "the metering stage composes with the windowed engine only"
+        meter = [s.shifted(-rows.t0) for s in meter]
     if engine == "scan":
         assert not return_pipe, "return_pipe needs the windowed engine"
         res = attribute_totals_fused_scan(
@@ -2384,7 +2499,7 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
             max_lag=max_lag, ema=ema, tail=tail, var_floor=var_floor,
             dtype=dtype, interpret=interpret, use_kernel=use_kernel,
             host=host, health=health, registry=registry,
-            health_names=[tr.name for tr in flat])
+            health_names=[tr.name for tr in flat], meter=meter)
         for t_blk, v_blk in stream_row_windows(rows, chunk):
             pipe.update(t_blk, v_blk)
         pipe.finalize(t_end)

@@ -74,6 +74,29 @@ class HealthRegistry:
             ]
         self.register_source(f"sampler:{name}", _fn)
 
+    def track_serve(self, name: str, engine) -> None:
+        """Expose a ``serve.ServeEngine``'s scheduler gauges plus the
+        rolling per-request energy percentiles (metering gauges)."""
+        def _fn(eng=engine):
+            out = [
+                Metric("serve_requests_total",
+                       float(eng.requests_served), kind="counter"),
+                Metric("serve_tokens_total",
+                       float(eng.tokens_emitted), kind="counter"),
+                Metric("serve_host_transfers_total",
+                       float(eng.host_transfers), kind="counter"),
+                Metric("serve_queue_depth", float(eng.queue_depth)),
+                Metric("serve_active_slots", float(eng.active_slots)),
+            ]
+            roll = getattr(eng, "meter_rolling", None)
+            if roll is not None and len(roll):
+                out.append(Metric(
+                    "meter_j_per_request", roll.summary(),
+                    help="rolling per-request energy percentiles (J)",
+                    label="q"))
+            return out
+        self.register_source(f"serve:{name}", _fn)
+
     def track_collectives(self, collectives) -> None:
         """Expose the framed-reduce wire stats (bytes posted vs dense)."""
         def _fn(co=collectives):

@@ -204,7 +204,9 @@ def attention_apply(p, cfg, x, positions, *, layer_window=0, kv_cache=None,
     kv_cache: dict(k=(B, W, Hkv, D), v=...) or None.  For sliding-window
     layers W = min(max_len, window) and the cache is a RING indexed by
     position % W; otherwise W = max_len with direct indexing.
-    cache_index: scalar int32 — write offset (decode) / 0 (prefill).
+    cache_index: scalar int32 — write offset (decode) / 0 (prefill) —
+    or a (B,) int32 vector of per-row offsets during single-token decode
+    (continuous batching: each slot advances at its own position).
     cross_kv: precomputed (k, v) for cross-attention (whisper decoder).
     """
     b, s, _ = x.shape
@@ -287,10 +289,15 @@ def attention_apply(p, cfg, x, positions, *, layer_window=0, kv_cache=None,
     # decode: ring slot or direct slot, then distributed flash-decode
     # (caches stay in their storage dtype; dequant happens per shard)
     slot = jnp.mod(cache_index, w_len) if ring else cache_index
-    ck = lax.dynamic_update_slice(kv_cache["k"], k.astype(cd),
-                                  (0, slot, 0, 0))
-    cv = lax.dynamic_update_slice(kv_cache["v"], v.astype(cd),
-                                  (0, slot, 0, 0))
+    if jnp.ndim(slot) == 1:
+        # per-row write offsets: scatter each batch row at its own slot
+        ck = kv_cache["k"].at[jnp.arange(b), slot].set(k[:, 0].astype(cd))
+        cv = kv_cache["v"].at[jnp.arange(b), slot].set(v[:, 0].astype(cd))
+    else:
+        ck = lax.dynamic_update_slice(kv_cache["k"], k.astype(cd),
+                                      (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(kv_cache["v"], v.astype(cd),
+                                      (0, slot, 0, 0))
     from repro.distributed.decode_attention import decode_attention
     out = decode_attention(
         q, ck, cv, cache_index, mesh,

@@ -1,0 +1,15 @@
+"""Serving: continuous-batching engine + per-request energy metering.
+
+``engine`` holds the continuous-batching :class:`ServeEngine` (slot
+scheduler, persistent per-slot cache, jitted masked decode, device-side
+token drains) and the :class:`FixedBatchEngine` baseline; ``loadgen``
+generates Poisson-arrival mixed-length traffic; ``metering`` turns the
+fleet pipeline's token-weighted occupancy split into J/request,
+J/token, rolling percentiles and per-user aggregates.
+"""
+from repro.serve.engine import (                 # noqa: F401
+    FixedBatchEngine, Request, ServeEngine)
+from repro.serve.loadgen import poisson_requests  # noqa: F401
+from repro.serve.metering import (               # noqa: F401
+    METER_LOG_ENV, RequestEnergy, RequestEnergyReport,
+    RollingPercentiles)

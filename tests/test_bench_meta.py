@@ -66,6 +66,18 @@ def test_gated_metrics_present_in_baselines(compare_mod):
         "the >=10x collective-payload shrink must stay enforced"
 
 
+def test_serve_metrics_gated_in_baselines(compare_mod):
+    """Continuous batching stays gated: BOTH baselines must floor the
+    serve speedup at >= 1.5x and pin the per-request conservation
+    parity (meter_rel_err)."""
+    for fname in ("baseline.json", "baseline-full.json"):
+        base = json.loads((BENCH_DIR / fname).read_text())
+        serve = base["bench_serve"]
+        assert serve["floors"]["serve_speedup"] >= 1.5, fname
+        assert serve["parity"]["meter_rel_err"] <= 1e-9, \
+            f"{fname}: conservation parity must gate at float64 roundoff"
+
+
 def test_floor_gate(compare_mod, tmp_path):
     baseline = {"bench_a": {"us_per_call": 100.0, "parity": {},
                             "floors": {"scan_thr": 1.5,

@@ -1,0 +1,127 @@
+"""Fault-tolerance overhead: carry checkpoint/restore on the streaming
+pipeline, plus the exact-resume guarantee.
+
+The elastic-fleets ISSUE's bars: writing a carry checkpoint every K
+replay windows must cost milliseconds (the carries are O(fleet x tail)
+— independent of run length), restoring one must be just as cheap, and
+a run killed mid-stream and resumed from the last checkpoint must
+reproduce the uninterrupted run's fused per-phase energies to the BIT
+(``resume_exact`` — a machine-independent 0/1 gated as a floor at 1.0
+in both baselines; wall-clock numbers are reported but only the usual
+slowdown gate applies to them).
+"""
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.bench_stream import make_groups
+from benchmarks.common import smoke, timed
+
+N_DEVICES = smoke(16, 4)
+CHUNK = smoke(2048, 512)
+N_PHASES = 8
+
+
+class _Kill(Exception):
+    pass
+
+
+def _energy(res):
+    return np.array([[p.energy_j for p in row] for row in res])
+
+
+def run():
+    from repro.align import align_and_fuse
+    from repro.fleet.pipeline import attribute_energy_fused_streaming
+
+    truth, groups = make_groups(N_DEVICES)
+    fused = align_and_fuse(groups, reference=truth)
+    grid = fused[0].grid
+    d_all = np.concatenate([fs.delays for fs in fused])
+    edges = np.linspace(float(grid[0]), float(grid[-1]), N_PHASES + 1)
+    phases = [(f"p{k}", float(a), float(b))
+              for k, (a, b) in enumerate(zip(edges[:-1], edges[1:]))]
+    kw = dict(grid=grid, delays=d_all, chunk=CHUNK)
+
+    # the uninterrupted oracle (and the replay-window count)
+    (res, pipe0), base_us = timed(
+        lambda: attribute_energy_fused_streaming(
+            groups, phases, return_pipe=True, **kw))
+    e_base = _energy(res)
+    n_windows = pipe0.pipeline.windows
+    every = max(1, n_windows // 4)
+    kill_at = min(2 * every + 1, n_windows)
+
+    dir_a = tempfile.mkdtemp(prefix="bench_ft_a_")
+    dir_b = tempfile.mkdtemp(prefix="bench_ft_b_")
+    try:
+        # checkpointing run: time each checkpoint() from the hook
+        ckpt_times = []
+
+        def ckpt_hook(pipe, w):
+            if w % every == 0:
+                t0 = time.perf_counter()
+                pipe.checkpoint(dir_a)
+                ckpt_times.append(time.perf_counter() - t0)
+
+        (res_c, pipe), ckpt_us = timed(
+            lambda: attribute_energy_fused_streaming(
+                groups, phases, on_window=ckpt_hook, return_pipe=True,
+                **kw))
+        ckpt_exact = float(np.array_equal(_energy(res_c), e_base))
+
+        # restore() back into the live pipe: the pure-read path
+        _, restore_us = timed(lambda: pipe.restore(dir_a))
+
+        # kill mid-run, then resume: fused energies must be bit-equal
+        def killer(pipe, w):
+            if w == kill_at:
+                raise _Kill
+
+        try:
+            attribute_energy_fused_streaming(
+                groups, phases, checkpoint_dir=dir_b,
+                checkpoint_every=every, on_window=killer, **kw)
+        except _Kill:
+            pass
+        res_r = attribute_energy_fused_streaming(
+            groups, phases, checkpoint_dir=dir_b, resume=True, **kw)
+        resume_exact = float(np.array_equal(_energy(res_r), e_base))
+    finally:
+        shutil.rmtree(dir_a, ignore_errors=True)
+        shutil.rmtree(dir_b, ignore_errors=True)
+
+    return {"base_s": base_us / 1e6, "ckpt_s": ckpt_us / 1e6,
+            "ckpt_ms": 1e3 * float(np.median(ckpt_times)),
+            "n_ckpts": len(ckpt_times),
+            "restore_ms": restore_us / 1e3,
+            "n_windows": n_windows, "every": every, "kill_at": kill_at,
+            "ckpt_exact": ckpt_exact, "resume_exact": resume_exact}
+
+
+def main():
+    out, us = timed(run)
+    print(f"# carry checkpoint/restore — {N_DEVICES} devices, "
+          f"chunk {CHUNK}, {out['n_windows']} replay windows, "
+          f"checkpoint every {out['every']}")
+    print(f"  plain run:        {out['base_s']*1e3:8.2f} ms")
+    print(f"  + checkpoints:    {out['ckpt_s']*1e3:8.2f} ms "
+          f"({out['n_ckpts']} checkpoints, "
+          f"median {out['ckpt_ms']:.2f} ms each)")
+    print(f"  restore():        {out['restore_ms']:8.2f} ms")
+    print(f"  kill@{out['kill_at']} + resume: bit-exact = "
+          f"{bool(out['resume_exact'])}")
+    assert out["ckpt_exact"] == 1.0, \
+        "writing checkpoints perturbed the fused energies"
+    assert out["resume_exact"] == 1.0, \
+        "killed+resumed energies are not bit-identical to the oracle"
+    derived = (f"ckpt_ms={out['ckpt_ms']:.3f},"
+               f"restore_ms={out['restore_ms']:.3f},"
+               f"resume_exact={out['resume_exact']:.1f}")
+    return us, derived
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ BENCHES = [
     "bench_health",             # health-stage overhead + detect latency
     "bench_serve",              # continuous batching + request metering
     "bench_multihost",          # multi-host weak scaling (spawn harness)
+    "bench_ft",                 # carry checkpoint/restore + exact resume
     "bench_hpl",                # Fig. 7 + energy table
     "bench_hpg",                # Fig. 8
     "bench_overhead",           # §II-D <1% overhead

@@ -19,6 +19,19 @@ import time
 from typing import Callable, Optional
 
 
+def _median(values) -> float:
+    """True median: average of the two middle elements for even n.
+
+    The previous upper-element shortcut (``sorted(x)[n // 2]``) biased
+    both the center and the MAD high on even host counts, inflating
+    deviation scores for every host below the upper-middle element.
+    """
+    s = sorted(values)
+    n = len(s)
+    mid = n // 2
+    return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
 @dataclasses.dataclass
 class StragglerVerdict:
     host: int
@@ -51,8 +64,8 @@ class StragglerMonitor:
 
     def observe(self, step_times_s) -> list:
         assert len(step_times_s) == self.n_hosts
-        med = sorted(step_times_s)[self.n_hosts // 2]
-        mad = sorted(abs(t - med) for t in step_times_s)[self.n_hosts // 2]
+        med = _median(step_times_s)
+        mad = _median(abs(t - med) for t in step_times_s)
         mad = max(mad, 1e-4 * max(med, 1e-9), 1e-9)
         verdicts = []
         for h, t in enumerate(step_times_s):
@@ -82,10 +95,17 @@ class RestartPolicy:
     max_restarts: int = 10
     backoff_s: float = 0.0        # 0 in tests; seconds on real clusters
     backoff_factor: float = 2.0
+    backoff_max_s: float = 300.0  # cap: 2**attempt is unbounded otherwise
     skip_batch_on_nan: bool = True
+    # a long campaign with occasional transient faults must not trip
+    # max_restarts when every fault recovered cleanly: after this many
+    # consecutive clean steps the restart counter resets to zero
+    # (0 disables decay)
+    reset_after_steps: int = 100
 
     def backoff(self, attempt: int) -> float:
-        return self.backoff_s * (self.backoff_factor ** attempt)
+        return min(self.backoff_s * (self.backoff_factor ** attempt),
+                   self.backoff_max_s)
 
 
 def run_with_restarts(make_state, train_one_step, *, n_steps,
@@ -106,6 +126,7 @@ def run_with_restarts(make_state, train_one_step, *, n_steps,
             on_event(kind, kw)
 
     restarts = 0
+    clean_steps = 0
     skip_steps: set = set()
     restored = restore_fn()
     state, step = restored if restored else make_state()
@@ -120,11 +141,17 @@ def run_with_restarts(make_state, train_one_step, *, n_steps,
             if loss is not None and not math.isfinite(float(loss)):
                 raise TrainingFault("nan_loss", f"step {step}")
             step += 1
+            clean_steps += 1
+            if (restarts and policy.reset_after_steps
+                    and clean_steps >= policy.reset_after_steps):
+                restarts = 0
+                emit("restart_budget_reset", step=step)
             if step % ckpt_every == 0:
                 save_fn(state, step)
                 emit("checkpoint", step=step)
         except TrainingFault as e:
             restarts += 1
+            clean_steps = 0
             emit("fault", step=step, fault=e.kind, restart=restarts)
             if restarts > policy.max_restarts:
                 raise

@@ -344,7 +344,11 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
                                      use_kernel=None, host: bool = False,
                                      record: bool = False,
                                      return_pipe: bool = False,
-                                     health=None, registry=None):
+                                     health=None, registry=None,
+                                     checkpoint_dir=None,
+                                     checkpoint_every: int = 0,
+                                     resume: bool = False,
+                                     on_window=None, dq_policy=None):
     """Fleet-wide fused per-phase energy, rows sharded across hosts.
 
     The multi-host counterpart of
@@ -383,6 +387,21 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
     allgathered once (tiny pickle) so every host labels the same global
     rows identically.  ``registry`` is an optional
     ``health.HealthRegistry`` for telemetry export.
+
+    Elastic fault tolerance: ``checkpoint_dir`` (a path every host can
+    reach) + ``checkpoint_every=K`` writes per-GLOBAL-group carry
+    checkpoints every K replay windows; ``resume=True`` reloads the
+    newest checkpoint complete across ALL groups and skips the
+    already-folded windows.  Because the checkpoint is keyed by global
+    group id and the replay plan is pinned by all-reduced provenance,
+    the resuming fleet may use a DIFFERENT process count or host<-group
+    assignment than the killed one — the resumed fused energies are
+    bit-identical to the uninterrupted run either way (the skip loop
+    performs no collectives and every host skips the same count, so
+    lockstep is preserved).  ``on_window(pipe, w)`` fires after replay
+    window ``w`` (1-based) completes on this host — the chaos tests'
+    kill-injection hook.  ``dq_policy`` is a
+    ``fleet.pipeline.DataQualityPolicy`` for ingest/fuse accounting.
     """
     from repro.core.attribution import PhaseEnergy
     from repro.fleet.pipeline import (StreamingFusedPipeline,
@@ -472,14 +491,33 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
         collectives=collectives, shard=shard, record=record,
         dtype=dtype, interpret=interpret, use_kernel=use_kernel,
         host=host, health=health, registry=registry,
-        health_names=health_names)
+        health_names=health_names, dq_policy=dq_policy)
     span = (collectives.allreduce_min(
                 float(rows.times[:n, 0].astype(np.float64).min())),
             collectives.allreduce_max(
                 float(rows.times[:n, -1].astype(np.float64).max())))
-    for t_blk, v_blk in stream_row_windows(rows, chunk, span=span,
-                                           cadence=cadence):
+    start_w = 0
+    if resume:
+        assert checkpoint_dir is not None, \
+            "resume=True needs checkpoint_dir"
+        try:
+            start_w = pipe.restore(checkpoint_dir)
+        except FileNotFoundError:
+            start_w = 0      # cold start — same outcome on every host:
+            #                  _resolve_ckpt_step reads the SHARED dirs
+    for w, (t_blk, v_blk) in enumerate(
+            stream_row_windows(rows, chunk, span=span, cadence=cadence),
+            start=1):
+        if w <= start_w:
+            continue   # skip replayed windows: NO collectives fire
+            #            here and every host skips the same count, so
+            #            the fleet stays in reduce lockstep
         pipe.update(t_blk, v_blk)
+        if (checkpoint_dir is not None and checkpoint_every
+                and w % checkpoint_every == 0):
+            pipe.checkpoint(checkpoint_dir)
+        if on_window is not None:
+            on_window(pipe, w)
     pipe.finalize(t_end)
     totals = pipe.totals()                 # fleet-wide, replicated
     out = []

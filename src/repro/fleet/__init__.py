@@ -39,6 +39,7 @@ from repro.fleet.reconstruct import (fleet_reconstruct,  # noqa: F401
 from repro.fleet.streaming import (FleetStream,  # noqa: F401
                                    StreamingPhaseAccumulator)
 from repro.fleet.pipeline import (AlignTrackStage,  # noqa: F401
+                                  DataQualityError, DataQualityPolicy,
                                   IngestStage, PhaseIntegrateStage,
                                   ReconstructStage, RegridFuseStage,
                                   ScanResult, StreamPipeline,

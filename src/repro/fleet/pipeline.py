@@ -68,6 +68,7 @@ import functools
 import logging
 import pickle
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -103,7 +104,39 @@ def pad_phases(phases, dtype=np.float32):
     return ph
 
 
-def sanitize_chunk(times, energy, valid=None, carry_t=None, carry_e=None):
+class DataQualityError(ValueError):
+    """A per-stage data-quality policy rejected this window."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DataQualityPolicy:
+    """Per-stage late/reordered/dropped-sample handling.
+
+    Production sensor streams deliver reordered reads (``late``) and
+    masked/dropped slots (``dropped``); the grid emit can leave streams
+    with thin coverage (``min_coverage``, the per-row covered-slot
+    fraction of an emitted window).  Every policy defaults to the
+    pipeline's historical behavior — repair and keep counting — so a
+    policy-less pipeline is byte-for-byte unchanged; ``"raise"`` turns
+    the corresponding condition into a :class:`DataQualityError` at the
+    window that violates it.  The counters and per-window flags this
+    accounting produces surface through the ``data_quality``
+    ``HealthRegistry`` source whether or not a policy is attached.
+    """
+    late: str = "repair"           # "repair" | "raise"
+    dropped: str = "repair"        # "repair" | "raise"
+    min_coverage: float = 0.0      # emitted-window covered-slot floor
+    coverage: str = "flag"         # "flag" | "raise"
+
+    def __post_init__(self):
+        assert self.late in ("repair", "raise"), self.late
+        assert self.dropped in ("repair", "raise"), self.dropped
+        assert self.coverage in ("flag", "raise"), self.coverage
+        assert 0.0 <= self.min_coverage <= 1.0, self.min_coverage
+
+
+def sanitize_chunk(times, energy, valid=None, carry_t=None, carry_e=None,
+                   return_counts: bool = False):
     """Host-side ingest guard: make each row's hold edges non-decreasing.
 
     Keeps a sample iff its timestamp strictly exceeds the running max of
@@ -112,6 +145,13 @@ def sanitize_chunk(times, energy, valid=None, carry_t=None, carry_e=None):
     last kept (t, E) so they become zero-width and their dE telescopes
     into the next kept interval.  The common all-monotonic case is a
     single vectorized check with no copies.
+
+    ``return_counts=True`` additionally returns per-row data-quality
+    tallies ``{"late", "masked"}`` ((F,) int64 each): ``late`` counts
+    valid samples repaired because their timestamp had already been
+    passed (reordered/late arrivals — equal-timestamp duplicates are a
+    normal hold republication and are NOT counted), ``masked`` counts
+    invalid slots.  The fast path returns zeros without extra work.
     """
     t = np.asarray(times)
     e = np.asarray(energy)
@@ -125,6 +165,9 @@ def sanitize_chunk(times, energy, valid=None, carry_t=None, carry_e=None):
     if valid is None \
             and not (t[:, 1:] < t[:, :-1]).any() \
             and (carry_t is None or not (t[:, :1] < carry_t).any()):
+        if return_counts:
+            z = np.zeros((f,), np.int64)
+            return t, e, {"late": z, "masked": z.copy()}
         return t, e
     lead = np.full((f, 1), -np.inf, t.dtype) if carry_t is None \
         else np.asarray(carry_t, t.dtype)
@@ -132,6 +175,16 @@ def sanitize_chunk(times, energy, valid=None, carry_t=None, carry_e=None):
     run_max = np.maximum.accumulate(
         np.concatenate([lead, tv], axis=1), axis=1)
     keep = tv > run_max[:, :-1]
+    counts = None
+    if return_counts:
+        vm = (np.ones((f, c), bool) if valid is None
+              else np.asarray(valid, bool))
+        counts = {
+            "late": (vm & ~keep
+                     & (tv < run_max[:, :-1])).sum(axis=1,
+                                                   dtype=np.int64),
+            "masked": (~vm).sum(axis=1, dtype=np.int64),
+        }
     idx = np.broadcast_to(np.arange(c)[None, :], (f, c))
     last = np.maximum.accumulate(np.where(keep, idx, -1), axis=1)
     src = np.maximum(last, 0)
@@ -149,6 +202,8 @@ def sanitize_chunk(times, energy, valid=None, carry_t=None, carry_e=None):
                          t_eff)
         e_eff = np.where(no_prev, np.take_along_axis(e, first, axis=1),
                          e_eff)
+    if return_counts:
+        return t_eff, e_eff, counts
     return t_eff, e_eff
 
 
@@ -233,19 +288,51 @@ class IngestStage:
     """
 
     def __init__(self, n_streams: int, *, mode: str = "sanitize",
-                 kind_row=None):
+                 kind_row=None, dq_policy: DataQualityPolicy = None):
         assert mode in ("sanitize", "maskfill")
         self.mode = mode
         self.n_streams = n_streams
         self.kind_row = (None if kind_row is None
                          else np.asarray(kind_row, bool).reshape(-1))
+        self.dq_policy = dq_policy
         self.carry: IngestCarry = None
         self._t_first = None
+        self.dq_late = None        # (F,) int64 cumulative repair counts
+        self.dq_masked = None
+        self.dq_last: dict = {}    # this window's per-row counts
 
     def reset(self):
         self.carry = None
         self._t_first = None
+        self.dq_late = None
+        self.dq_masked = None
+        self.dq_last = {}
         return self
+
+    def _dq_account(self, counts: dict):
+        """Fold one window's repair tallies; enforce the policy."""
+        if self.dq_late is None:
+            self.dq_late = np.zeros_like(counts["late"])
+            self.dq_masked = np.zeros_like(counts["masked"])
+        self.dq_late += counts["late"]
+        self.dq_masked += counts["masked"]
+        self.dq_last = counts
+        p = self.dq_policy
+        if p is None:
+            return
+        n = self.n_streams
+        if p.late == "raise" and counts["late"][:n].any():
+            i = int(np.argmax(counts["late"][:n] > 0))
+            raise DataQualityError(
+                f"ingest: row {i} delivered "
+                f"{int(counts['late'][i])} late/reordered sample(s) "
+                f"this window and the policy says raise")
+        if p.dropped == "raise" and counts["masked"][:n].any():
+            i = int(np.argmax(counts["masked"][:n] > 0))
+            raise DataQualityError(
+                f"ingest: row {i} dropped "
+                f"{int(counts['masked'][i])} sample slot(s) this "
+                f"window and the policy says raise")
 
     def update(self, times, values, valid=None) -> ClosedWindow:
         t = np.asarray(times)
@@ -272,13 +359,22 @@ class IngestStage:
                 # open at the seed (the later minimum() never undercuts)
                 self._t_first = np.where(self.kind_row, np.inf, seed64)
         if self.mode == "sanitize":
-            t_eff, v_eff = sanitize_chunk(t, v, valid,
-                                          self.carry.t, self.carry.v)
+            t_eff, v_eff, dq = sanitize_chunk(t, v, valid,
+                                              self.carry.t, self.carry.v,
+                                              return_counts=True)
+            self._dq_account(dq)
         elif valid is None:
             t_eff, v_eff = t, v
+            self._dq_account({
+                "late": np.zeros((t.shape[0],), np.int64),
+                "masked": np.zeros((t.shape[0],), np.int64)})
         else:
             t_eff, v_eff = _maskfill_chunk(t, v, valid,
                                            self.carry.t, self.carry.v)
+            self._dq_account({
+                "late": np.zeros((t.shape[0],), np.int64),
+                "masked": (~np.asarray(valid, bool)).sum(
+                    axis=1, dtype=np.int64)})
         t_aug = np.concatenate([self.carry.t, t_eff], axis=1)
         v_aug = np.concatenate([self.carry.v, v_eff], axis=1)
         if self.mode == "sanitize" and np.isinf(self._t_first).any():
@@ -837,7 +933,8 @@ class RegridFuseStage:
                  grid_step: float, delays=None, align=None,
                  tail: int = 256, var_floor: float = 0.25,
                  collectives=None, record: bool = False,
-                 interpret=None, use_kernel=None, host: bool = False):
+                 interpret=None, use_kernel=None, host: bool = False,
+                 dq_policy: DataQualityPolicy = None):
         self.group_sizes = list(group_sizes)
         self.n_streams = int(sum(self.group_sizes))
         self.origin = float(grid_origin)
@@ -863,6 +960,13 @@ class RegridFuseStage:
         # gates the fusion statistics from the NEXT window on
         self.health = None
         self.last_frontier = None   # telemetry: emit-frontier lag
+        self.dq_policy = dq_policy
+        # coverage-pattern accounting: per-stream covered-slot tallies
+        # plus the latest emitted window's coverage fraction and flag
+        self.dq_covered = np.zeros((self.n_streams,), np.int64)
+        self.dq_slots = 0
+        self.dq_last_coverage = np.ones((self.n_streams,))
+        self.dq_low_coverage = np.zeros((self.n_streams,), bool)
 
     def reset(self):
         self._tail.reset()
@@ -871,6 +975,10 @@ class RegridFuseStage:
                                ssr=np.zeros((self.n_streams,)))
         self._t_first = None
         self.emitted = []
+        self.dq_covered = np.zeros((self.n_streams,), np.int64)
+        self.dq_slots = 0
+        self.dq_last_coverage = np.ones((self.n_streams,))
+        self.dq_low_coverage = np.zeros((self.n_streams,), bool)
         return self
 
     def _delays(self, f: int) -> np.ndarray:
@@ -926,6 +1034,23 @@ class RegridFuseStage:
                                  host=self.host)
         n = self.n_streams
         vals, mask = vals[:n], mask[:n]
+        # coverage-pattern accounting: which slots each stream covered
+        # in this emitted window (the per-window data-quality surface)
+        self.dq_covered += mask.sum(axis=1, dtype=np.int64)
+        self.dq_slots += mask.shape[1]
+        cov = mask.mean(axis=1)
+        self.dq_last_coverage = cov
+        p = self.dq_policy
+        if p is not None and p.min_coverage > 0.0:
+            low = cov < p.min_coverage
+            self.dq_low_coverage = low
+            if p.coverage == "raise" and low.any():
+                i = int(np.argmax(low))
+                raise DataQualityError(
+                    f"regrid/fuse: row {i} covered only "
+                    f"{cov[i]:.3f} of the emitted window "
+                    f"(< min_coverage={p.min_coverage}) and the "
+                    f"policy says raise")
         # quarantine feedback: QUARANTINED/RECOVERING rows are dropped
         # from the fusion statistics (the emitted window keeps the RAW
         # mask so the health stage can keep scoring them).  All-healthy
@@ -1748,7 +1873,7 @@ class StreamingFusedPipeline:
                  record: bool = False, dtype=np.float32,
                  interpret=None, use_kernel=None, host: bool = False,
                  health=None, registry=None, health_names=None,
-                 meter=None):
+                 meter=None, dq_policy: DataQualityPolicy = None):
         self.group_sizes = list(group_sizes)
         self.collectives = collectives
         self.shard = shard
@@ -1773,7 +1898,8 @@ class StreamingFusedPipeline:
         uk_bool = True if use_kernel is None else use_kernel
         if track is None:
             track = delays is None
-        self.ingest = IngestStage(n, mode="sanitize", kind_row=kr)
+        self.ingest = IngestStage(n, mode="sanitize", kind_row=kr,
+                                  dq_policy=dq_policy)
         self.reconstruct = ReconstructStage(
             kr, wp, interpret=interpret, use_kernel=uk_bool,
             host=host)
@@ -1791,7 +1917,7 @@ class StreamingFusedPipeline:
             grid_step=grid_step, delays=delays, align=self.align,
             tail=tail, var_floor=var_floor, collectives=collectives,
             record=record, interpret=interpret,
-            use_kernel=use_kernel, host=host)
+            use_kernel=use_kernel, host=host, dq_policy=dq_policy)
         self.attr = FusedPhaseAttributeStage(phases, self.group_sizes,
                                              self.fuse,
                                              collectives=collectives,
@@ -1834,9 +1960,14 @@ class StreamingFusedPipeline:
         if registry is not None:
             self.pipeline.attach_registry(registry)
             self._attach_fuse_metrics(registry)
+            self._attach_dq_metrics(registry)
             if collectives is not None:
                 registry.track_collectives(collectives)
         self._dtype = dtype
+        self._window = int(window)
+        self._hop = int(hop)
+        self._tail_width = int(tail)
+        self._var_floor = float(var_floor)
 
     def _attach_fuse_metrics(self, registry) -> None:
         from repro.health.registry import Metric
@@ -1855,6 +1986,46 @@ class StreamingFusedPipeline:
                        float(fuse.carry.next_slot), kind="counter"),
             ]
         registry.register_source("fuse", _fn)
+
+    def _attach_dq_metrics(self, registry) -> None:
+        """The ``data_quality`` registry source: ingest repair counters,
+        emitted-window coverage, and the per-window flags."""
+        from repro.health.registry import Metric
+        ing, fuse, n = self.ingest, self.fuse, self.n_streams
+
+        def per(arr):
+            return {f"r{i}": float(arr[i]) for i in range(n)}
+
+        def _fn():
+            z = np.zeros((n,), np.int64)
+            late = ing.dq_late[:n] if ing.dq_late is not None else z
+            masked = (ing.dq_masked[:n] if ing.dq_masked is not None
+                      else z)
+            w_late = ing.dq_last.get("late")
+            w_masked = ing.dq_last.get("masked")
+            flags = {
+                "late": float(bool(w_late is not None
+                                   and w_late[:n].any())),
+                "dropped": float(bool(w_masked is not None
+                                      and w_masked[:n].any())),
+                "low_coverage": float(bool(fuse.dq_low_coverage.any())),
+            }
+            return [
+                Metric("ingest_late_samples_total", per(late),
+                       kind="counter", label="row",
+                       help="reordered/late samples repaired at ingest"),
+                Metric("ingest_dropped_samples_total", per(masked),
+                       kind="counter", label="row",
+                       help="masked/dropped sample slots at ingest"),
+                Metric("window_coverage_frac",
+                       per(fuse.dq_last_coverage), label="row",
+                       help="last emitted window's covered-slot "
+                            "fraction per stream"),
+                Metric("dq_flag", flags, label="flag",
+                       help="per-window data-quality flags (1 = seen "
+                            "in the latest window)"),
+            ]
+        registry.register_source("data_quality", _fn)
 
     def update(self, times, values, valid=None):
         t = np.asarray(times, self._dtype)
@@ -1949,6 +2120,478 @@ class StreamingFusedPipeline:
     def reset(self):
         self.pipeline.reset()
         return self
+
+    # -- elastic checkpoint/restart --------------------------------------
+    #
+    # Layout (one directory tree per run, on a filesystem every host can
+    # reach):
+    #
+    #   ckpt_dir/shared/step_W/          process 0 only — state that is
+    #                                    IDENTICAL on every host (it is
+    #                                    all-reduced: frontier slots,
+    #                                    fleet delay EMA, health machine)
+    #   ckpt_dir/group_{gid:05d}/step_W/ owning host — per-GLOBAL-group
+    #                                    carry slices
+    #
+    # Keying the per-group trees by global group id (not by host) is
+    # what makes restore elastic: any process count and any host<-group
+    # assignment can reload the same checkpoint, each host gathering
+    # exactly the groups it now owns.  Every saved array is the exact
+    # carry (float64 where the pipeline is float64), so a restored run
+    # continues the left folds bit-identically — the fold-order
+    # determinism rule extends across the kill/restore boundary.
+
+    @property
+    def _ckpt_group_ids(self) -> list:
+        if self.shard is not None:
+            return [int(g) for g in self.shard.group_ids]
+        return list(range(len(self.group_sizes)))
+
+    def _ckpt_config(self) -> dict:
+        """Pipeline-shape fingerprint: restore refuses a checkpoint
+        written by a differently-configured pipeline (values must be
+        JSON-round-trip stable: python ints/floats/bools/strs only)."""
+        gs = (list(self.shard.global_group_sizes)
+              if self.shard is not None else list(self.group_sizes))
+        al = self.align
+        return {
+            "global_group_sizes": [int(s) for s in gs],
+            "n_phases": int(self.attr.n_phases),
+            "grid_origin": float(self.fuse.origin),
+            "grid_step": float(self.fuse.step),
+            "track": al is not None,
+            "synced": bool(al is not None and al.synced),
+            "window": int(self._window),
+            "hop": int(self._hop),
+            "tail": int(self._tail_width),
+            "var_floor": float(self._var_floor),
+            "health": self.health_stage is not None,
+            "meter": self.meter_stage is not None,
+            "dtype": str(np.dtype(self._dtype)),
+        }
+
+    def _shared_state(self) -> dict:
+        al, hs = self.align, self.health_stage
+        fc = self.fuse.carry
+        i64 = np.int64
+        tree = {
+            "windows": np.asarray([self.pipeline.windows], i64),
+            "fuse": {
+                "next_slot": np.asarray([fc.next_slot], i64),
+                "last_frontier": np.asarray(
+                    [np.nan if self.fuse.last_frontier is None
+                     else self.fuse.last_frontier], np.float64),
+                "dq_slots": np.asarray([self.fuse.dq_slots], i64),
+            },
+        }
+        if al is not None:
+            a = {"origin": np.asarray(
+                     [np.nan if al.origin is None else al.origin],
+                     np.float64),
+                 "next_slot": np.asarray([al.carry.next_slot], i64),
+                 "last_est_slot": np.asarray([al.carry.last_est_slot],
+                                             i64)}
+            if al.synced:
+                a["delay_fleet"] = np.asarray(al.delay_fleet, np.float64)
+                a["seen_fleet"] = np.asarray(al._seen_fleet, bool)
+            tree["align"] = a
+        if hs is not None:
+            tree["health"] = {
+                "state": np.asarray(hs.state, i64),
+                "flag_streak": np.asarray(hs.flag_streak, i64),
+                "clean_streak": np.asarray(hs.clean_streak, i64),
+                "ema_bias": np.asarray(hs.ema_bias, np.float64),
+                "ema_rms": np.asarray(hs.ema_rms, np.float64),
+                "ema_refresh": np.asarray(hs.ema_refresh, np.float64),
+                "ema_seen": np.asarray(hs._ema_seen, bool),
+                "refresh_seen": np.asarray(hs._refresh_seen, bool),
+                "bias": np.asarray(hs.bias, np.float64),
+                "rms": np.asarray(hs.rms, np.float64),
+                "dropout": np.asarray(hs.dropout, np.float64),
+                "windows": np.asarray([hs.windows], i64),
+            }
+        return tree
+
+    def _shared_skeleton(self) -> dict:
+        """Zeros tree matching ``_shared_state`` leaf-for-leaf (shape
+        AND dtype: restore_checkpoint validates both)."""
+        al, hs = self.align, self.health_stage
+        i1 = lambda: np.zeros((1,), np.int64)          # noqa: E731
+        f1 = lambda: np.zeros((1,), np.float64)        # noqa: E731
+        tree = {"windows": i1(),
+                "fuse": {"next_slot": i1(), "last_frontier": f1(),
+                         "dq_slots": i1()}}
+        if al is not None:
+            a = {"origin": f1(), "next_slot": i1(),
+                 "last_est_slot": i1()}
+            if al.synced:
+                g = int(self.shard.row_offsets[-1])
+                a["delay_fleet"] = np.zeros((g,), np.float64)
+                a["seen_fleet"] = np.zeros((g,), bool)
+            tree["align"] = a
+        if hs is not None:
+            g = hs.n_global
+            gi = lambda: np.zeros((g,), np.int64)      # noqa: E731
+            gf = lambda: np.zeros((g,), np.float64)    # noqa: E731
+            gb = lambda: np.zeros((g,), bool)          # noqa: E731
+            tree["health"] = {
+                "state": gi(), "flag_streak": gi(), "clean_streak": gi(),
+                "ema_bias": gf(), "ema_rms": gf(), "ema_refresh": gf(),
+                "ema_seen": gb(), "refresh_seen": gb(),
+                "bias": gf(), "rms": gf(), "dropout": gf(),
+                "windows": i1()}
+        return tree
+
+    def _group_skeleton(self, k: int, meta: dict) -> dict:
+        """Zeros tree matching one saved group slice (k streams)."""
+        dt = np.dtype(self._dtype)
+        T = self._tail_width
+        tree = {
+            "ingest": {"t": np.zeros((k, 1), dt),
+                       "v": np.zeros((k, 1), dt),
+                       "t_first": np.zeros((k,), np.float64),
+                       "dq_late": np.zeros((k,), np.int64),
+                       "dq_masked": np.zeros((k,), np.int64)},
+            "fuse": {"tail_t": np.zeros((k, T), dt),
+                     "tail_v": np.zeros((k, T), dt),
+                     "tail_dropped": np.zeros((k,), np.float64),
+                     "n_k": np.zeros((k,), np.float64),
+                     "ssr": np.zeros((k,), np.float64),
+                     "t_first": np.zeros((k,), np.float64),
+                     "dq_covered": np.zeros((k,), np.int64)},
+            "attr": {"t_prev": np.zeros((1,), np.float64),
+                     "integrals": {
+                         str(p): np.zeros((self.attr.n_phases, k))
+                         for p in meta["attr_patterns"]}},
+        }
+        if self.align is not None:
+            tree["align"] = {
+                "ring_v": np.zeros((k, self._window), dt),
+                "ring_m": np.zeros((k, self._window), bool),
+                "delay": np.zeros((k,), np.float64),
+                "seen": np.zeros((k,), bool),
+                "tail_t": np.zeros((k, T), dt),
+                "tail_v": np.zeros((k, T), dt),
+                "tail_dropped": np.zeros((k,), np.float64)}
+        if self.meter_stage is not None:
+            tree["meter"] = {
+                "t_prev": np.zeros((1,), np.float64),
+                "integrals": {
+                    str(p): np.zeros((self.meter_stage.n_phases, k))
+                    for p in meta["meter_patterns"]}}
+        if self.health_stage is not None:
+            from repro.health.stage import N_STATS
+            tree["health"] = {"pending": np.zeros((N_STATS, k))}
+        return tree
+
+    def checkpoint(self, ckpt_dir, *, keep: int = 3) -> int:
+        """Write one elastic checkpoint at the current window boundary.
+
+        Call between ``update`` calls (every host at the SAME boundary
+        in multi-host mode — it is not a collective, but the saved
+        shared state must describe one fleet-wide boundary).  Returns
+        the step (= windows processed) the checkpoint publishes under.
+        """
+        from repro.train.checkpoint import save_checkpoint
+        assert self.pipeline.windows > 0, \
+            "checkpoint() before the first update has nothing to save"
+        al = self.align
+        assert al is None or al._pending is None, \
+            "checkpoint() must run at a window boundary (a pending " \
+            "tracker contribution would be lost)"
+        step = int(self.pipeline.windows)
+        root = Path(ckpt_dir)
+        cfg = self._ckpt_config()
+        hs = self.health_stage
+        pend = None
+        if hs is not None:
+            from repro.health.stage import N_STATS
+            pend = (hs._pending if hs._pending is not None
+                    else np.zeros((N_STATS, hs.n_global)))
+        lo = 0
+        for j, (gid, k) in enumerate(zip(self._ckpt_group_ids,
+                                         self.group_sizes)):
+            sl = slice(lo, lo + k)
+            ic, fz = self.ingest.carry, self.fuse
+            tree = {
+                "ingest": {
+                    "t": np.asarray(ic.t[sl], self._dtype),
+                    "v": np.asarray(ic.v[sl], self._dtype),
+                    "t_first": np.asarray(self.ingest._t_first[sl],
+                                          np.float64),
+                    "dq_late": (
+                        self.ingest.dq_late[sl].astype(np.int64)
+                        if self.ingest.dq_late is not None
+                        else np.zeros((k,), np.int64)),
+                    "dq_masked": (
+                        self.ingest.dq_masked[sl].astype(np.int64)
+                        if self.ingest.dq_masked is not None
+                        else np.zeros((k,), np.int64)),
+                },
+                "fuse": {
+                    "tail_t": np.asarray(fz._tail.carry.t[sl],
+                                         self._dtype),
+                    "tail_v": np.asarray(fz._tail.carry.v[sl],
+                                         self._dtype),
+                    "tail_dropped": np.asarray(
+                        fz._tail.carry.dropped_t[sl], np.float64),
+                    "n_k": np.asarray(fz.carry.n_k[sl], np.float64),
+                    "ssr": np.asarray(fz.carry.ssr[sl], np.float64),
+                    "t_first": np.asarray(fz._t_first[sl], np.float64),
+                    "dq_covered": np.asarray(fz.dq_covered[sl],
+                                             np.int64),
+                },
+                "attr": {
+                    "t_prev": np.asarray([self.attr.carry.t_prev[j]],
+                                         np.float64),
+                    "integrals": {
+                        str(p): np.asarray(acc, np.float64)
+                        for p, acc in sorted(
+                            self.attr.carry.integrals[j].items())},
+                },
+            }
+            meta = {"config": cfg, "gid": gid,
+                    "attr_patterns": sorted(
+                        int(p) for p in self.attr.carry.integrals[j])}
+            if al is not None:
+                ac, tc = al.carry, al._tail.carry
+                tree["align"] = {
+                    "ring_v": np.asarray(ac.ring_v[sl], self._dtype),
+                    "ring_m": np.asarray(ac.ring_m[sl], bool),
+                    "delay": np.asarray(ac.delay[sl], np.float64),
+                    "seen": np.asarray(ac.seen[sl], bool),
+                    "tail_t": np.asarray(tc.t[sl], self._dtype),
+                    "tail_v": np.asarray(tc.v[sl], self._dtype),
+                    "tail_dropped": np.asarray(tc.dropped_t[sl],
+                                               np.float64)}
+            if self.meter_stage is not None:
+                mc = self.meter_stage.carry
+                tree["meter"] = {
+                    "t_prev": np.asarray([mc.t_prev[j]], np.float64),
+                    "integrals": {
+                        str(p): np.asarray(acc, np.float64)
+                        for p, acc in sorted(mc.integrals[j].items())}}
+                meta["meter_patterns"] = sorted(
+                    int(p) for p in mc.integrals[j])
+            if hs is not None:
+                tree["health"] = {"pending": pend[:, hs.row_ids[sl]]}
+            save_checkpoint(root / f"group_{gid:05d}", step, tree,
+                            keep=keep, extra_meta=meta)
+            lo += k
+        if self.collectives is None or self.collectives.process_id == 0:
+            save_checkpoint(
+                root / "shared", step, self._shared_state(), keep=keep,
+                extra_meta={"config": cfg,
+                            "suggested": (dict(hs._suggested)
+                                          if hs is not None else {})})
+        return step
+
+    def _resolve_ckpt_step(self, root, step):
+        """Largest step published by shared AND every global group dir
+        — the same answer on every host, and immune to a kill that
+        landed mid-checkpoint (a group whose save never published drops
+        that step for everyone)."""
+        n_groups = len(self._ckpt_config()["global_group_sizes"])
+        common = _published_steps(root / "shared")
+        for gid in range(n_groups):
+            common &= _published_steps(root / f"group_{gid:05d}")
+        if step is not None:
+            if int(step) not in common:
+                raise FileNotFoundError(
+                    f"checkpoint step {step} is not complete under "
+                    f"{root} (published everywhere: {sorted(common)})")
+            return int(step)
+        if not common:
+            raise FileNotFoundError(
+                f"no complete checkpoint under {root}")
+        return max(common)
+
+    def restore(self, ckpt_dir, *, step: int = None) -> int:
+        """Reload carries from :meth:`checkpoint`; returns the window
+        count the checkpoint was taken at (the replay skip count).
+
+        Elastic: the CURRENT pipeline's host<-group assignment and
+        process count need not match the saving run's — each host
+        gathers the global-group slices it now owns.  Trailing padding
+        rows replicate the last real row, exactly the state an
+        uninterrupted run holds (``update`` pads its inputs the same
+        way and every stage treats rows independently), so the resumed
+        fold is bit-identical.
+        """
+        from repro.train.checkpoint import (checkpoint_meta,
+                                            restore_checkpoint)
+        root = Path(ckpt_dir)
+        step = self._resolve_ckpt_step(root, step)
+        shared_meta, _ = checkpoint_meta(root / "shared", step=step)
+        cfg = self._ckpt_config()
+        assert dict(shared_meta["config"]) == cfg, \
+            f"checkpoint config mismatch:\n  saved {shared_meta['config']}" \
+            f"\n  self  {cfg}"
+        shared, _, _ = restore_checkpoint(
+            root / "shared", self._shared_skeleton(), step=step)
+        n, F = self.n_streams, self.n_rows
+        dt = np.dtype(self._dtype)
+        T = self._tail_width
+        al, hs, ms = self.align, self.health_stage, self.meter_stage
+        d = len(self.group_sizes)
+
+        ing_t = np.zeros((F, 1), dt)
+        ing_v = np.zeros((F, 1), dt)
+        t_first = np.full((F,), np.inf)
+        dq_late = np.zeros((F,), np.int64)
+        dq_masked = np.zeros((F,), np.int64)
+        fu_t = np.zeros((F, T), dt)
+        fu_v = np.zeros((F, T), dt)
+        fu_drop = np.full((F,), -np.inf)
+        n_k = np.zeros((n,))
+        ssr = np.zeros((n,))
+        fu_first = np.full((F,), np.inf)
+        dq_cov = np.zeros((n,), np.int64)
+        if al is not None:
+            ring_v = np.zeros((F, self._window), dt)
+            ring_m = np.zeros((F, self._window), bool)
+            delay = np.zeros((F,))
+            seen = np.zeros((F,), bool)
+            at_t = np.zeros((F, T), dt)
+            at_v = np.zeros((F, T), dt)
+            at_drop = np.full((F,), -np.inf)
+        if hs is not None:
+            from repro.health.stage import N_STATS
+            pend = np.zeros((N_STATS, hs.n_global))
+        attr_tp = np.full((d,), np.nan)
+        attr_ints = [{} for _ in range(d)]
+        if ms is not None:
+            met_tp = np.full((d,), np.nan)
+            met_ints = [{} for _ in range(d)]
+
+        lo = 0
+        for j, (gid, k) in enumerate(zip(self._ckpt_group_ids,
+                                         self.group_sizes)):
+            sl = slice(lo, lo + k)
+            gdir = root / f"group_{gid:05d}"
+            gmeta, _ = checkpoint_meta(gdir, step=step)
+            assert dict(gmeta["config"]) == cfg, \
+                f"group {gid}: checkpoint config mismatch"
+            assert int(gmeta["gid"]) == gid
+            g, _, _ = restore_checkpoint(
+                gdir, self._group_skeleton(k, gmeta), step=step)
+            ing = g["ingest"]
+            ing_t[sl] = ing["t"]
+            ing_v[sl] = ing["v"]
+            t_first[sl] = ing["t_first"]
+            dq_late[sl] = ing["dq_late"]
+            dq_masked[sl] = ing["dq_masked"]
+            fz = g["fuse"]
+            fu_t[sl] = fz["tail_t"]
+            fu_v[sl] = fz["tail_v"]
+            fu_drop[sl] = fz["tail_dropped"]
+            n_k[sl] = fz["n_k"]
+            ssr[sl] = fz["ssr"]
+            fu_first[sl] = fz["t_first"]
+            dq_cov[sl] = fz["dq_covered"]
+            if al is not None:
+                az = g["align"]
+                ring_v[sl] = az["ring_v"]
+                ring_m[sl] = az["ring_m"]
+                delay[sl] = az["delay"]
+                seen[sl] = az["seen"]
+                at_t[sl] = az["tail_t"]
+                at_v[sl] = az["tail_v"]
+                at_drop[sl] = az["tail_dropped"]
+            if hs is not None:
+                pend[:, hs.row_ids[sl]] = g["health"]["pending"]
+            attr_tp[j] = float(g["attr"]["t_prev"][0])
+            attr_ints[j] = {int(p): np.asarray(a, np.float64)
+                            for p, a in g["attr"]["integrals"].items()}
+            if ms is not None:
+                met_tp[j] = float(g["meter"]["t_prev"][0])
+                met_ints[j] = {
+                    int(p): np.asarray(a, np.float64)
+                    for p, a in g["meter"]["integrals"].items()}
+            lo += k
+        if F > n:
+            # padding rows replicate the LAST real row (see docstring);
+            # tracker padding never tracks: delay 0 / seen False, as in
+            # the live carry
+            r = slice(n - 1, n)
+            for arr in (ing_t, ing_v, fu_t, fu_v):
+                arr[n:] = arr[r]
+            for vec in (t_first, fu_first, fu_drop, dq_late, dq_masked):
+                vec[n:] = vec[n - 1]
+            if al is not None:
+                for arr in (ring_v, ring_m, at_t, at_v):
+                    arr[n:] = arr[r]
+                at_drop[n:] = at_drop[n - 1]
+
+        self.ingest.carry = IngestCarry(t=ing_t, v=ing_v)
+        self.ingest._t_first = t_first
+        self.ingest.dq_late = dq_late
+        self.ingest.dq_masked = dq_masked
+        self.ingest.dq_last = {}
+        fuse = self.fuse
+        fuse._tail.carry = TailCarry(t=fu_t, v=fu_v, dropped_t=fu_drop)
+        fuse.carry = FuseCarry(
+            next_slot=int(shared["fuse"]["next_slot"][0]),
+            n_k=n_k, ssr=ssr)
+        lf = float(shared["fuse"]["last_frontier"][0])
+        fuse.last_frontier = None if np.isnan(lf) else lf
+        fuse._t_first = fu_first
+        fuse.dq_covered = dq_cov
+        fuse.dq_slots = int(shared["fuse"]["dq_slots"][0])
+        fuse.dq_last_coverage = np.ones((n,))
+        fuse.dq_low_coverage = np.zeros((n,), bool)
+        if al is not None:
+            sa = shared["align"]
+            origin = float(sa["origin"][0])
+            al.origin = None if np.isnan(origin) else origin
+            al.carry = AlignCarry(
+                ring_v=ring_v, ring_m=ring_m,
+                next_slot=int(sa["next_slot"][0]),
+                last_est_slot=int(sa["last_est_slot"][0]),
+                delay=delay, seen=seen)
+            al._tail.carry = TailCarry(t=at_t, v=at_v,
+                                       dropped_t=at_drop)
+            al._pending = None
+            if al.synced:
+                al.delay_fleet = np.asarray(sa["delay_fleet"],
+                                            np.float64)
+                al._seen_fleet = np.asarray(sa["seen_fleet"], bool)
+        if hs is not None:
+            sh = shared["health"]
+            hs.state = np.asarray(sh["state"], np.int64)
+            hs.flag_streak = np.asarray(sh["flag_streak"], np.int64)
+            hs.clean_streak = np.asarray(sh["clean_streak"], np.int64)
+            hs.ema_bias = np.asarray(sh["ema_bias"], np.float64)
+            hs.ema_rms = np.asarray(sh["ema_rms"], np.float64)
+            hs.ema_refresh = np.asarray(sh["ema_refresh"], np.float64)
+            hs._ema_seen = np.asarray(sh["ema_seen"], bool)
+            hs._refresh_seen = np.asarray(sh["refresh_seen"], bool)
+            hs.bias = np.asarray(sh["bias"], np.float64)
+            hs.rms = np.asarray(sh["rms"], np.float64)
+            hs.dropout = np.asarray(sh["dropout"], np.float64)
+            hs.windows = int(sh["windows"][0])
+            # a saved all-zeros block folds exactly like a fresh None
+            # pending (take_pending substitutes zeros), so this is
+            # bit-safe whether or not a window was mid-flight
+            hs._pending = pend
+            hs._suggested = dict(shared_meta.get("suggested", {}))
+        self.attr.carry = FusedAttrCarry(t_prev=attr_tp,
+                                         integrals=attr_ints)
+        if ms is not None:
+            ms.carry = FusedAttrCarry(t_prev=met_tp,
+                                      integrals=met_ints)
+        self.pipeline.windows = int(shared["windows"][0])
+        return self.pipeline.windows
+
+
+def _published_steps(d) -> set:
+    """Step numbers atomically published under one checkpoint dir."""
+    d = Path(d)
+    if not d.exists():
+        return set()
+    return {int(p.name.split("_")[1]) for p in d.iterdir()
+            if p.is_dir() and p.name.startswith("step_")
+            and not p.name.endswith(".tmp")}
 
 
 # ---------------------------------------------------------------------------
@@ -2411,7 +3054,12 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
                                      engine: str = "windowed",
                                      health=None, registry=None,
                                      meter=None,
-                                     return_pipe: bool = False) -> list:
+                                     return_pipe: bool = False,
+                                     checkpoint_dir=None,
+                                     checkpoint_every: int = 0,
+                                     resume: bool = False,
+                                     on_window=None,
+                                     dq_policy=None) -> list:
     """Streaming-first counterpart of ``align.attribute_energy_fused``.
 
     trace_groups: [[SensorTrace, ...], ...] — all sensors observing one
@@ -2441,6 +3089,15 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
     ``return_pipe=True``.
     return_pipe: also return the driven pipeline (windowed engine), for
     health-event/metrics/metering inspection: ``(out, pipe)``.
+
+    Fault tolerance (windowed engine only): ``checkpoint_dir`` +
+    ``checkpoint_every=K`` writes an elastic carry checkpoint every K
+    replay windows; ``resume=True`` reloads the newest complete one and
+    SKIPS the already-processed windows — the resumed run's fused
+    energies are bit-identical to the uninterrupted run (the carries
+    are exact).  ``on_window(pipe, w)`` fires after window ``w``
+    (1-based) completes — test hook for kill injection.  ``dq_policy``:
+    a ``DataQualityPolicy`` for the ingest/fuse stages.
     """
     from repro.core.attribution import PhaseEnergy
     groups = [list(g) for g in trace_groups]
@@ -2481,6 +3138,9 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
         assert engine == "windowed", \
             "the metering stage composes with the windowed engine only"
         meter = [s.shifted(-rows.t0) for s in meter]
+    if checkpoint_dir is not None or resume or on_window is not None:
+        assert engine == "windowed", \
+            "checkpointing drives the windowed engine only"
     if engine == "scan":
         assert not return_pipe, "return_pipe needs the windowed engine"
         res = attribute_totals_fused_scan(
@@ -2499,9 +3159,26 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
             max_lag=max_lag, ema=ema, tail=tail, var_floor=var_floor,
             dtype=dtype, interpret=interpret, use_kernel=use_kernel,
             host=host, health=health, registry=registry,
-            health_names=[tr.name for tr in flat], meter=meter)
-        for t_blk, v_blk in stream_row_windows(rows, chunk):
+            health_names=[tr.name for tr in flat], meter=meter,
+            dq_policy=dq_policy)
+        start_w = 0
+        if resume:
+            assert checkpoint_dir is not None, \
+                "resume=True needs checkpoint_dir"
+            try:
+                start_w = pipe.restore(checkpoint_dir)
+            except FileNotFoundError:
+                start_w = 0          # cold start: nothing published yet
+        for w, (t_blk, v_blk) in enumerate(
+                stream_row_windows(rows, chunk), start=1):
+            if w <= start_w:
+                continue             # replayed windows: already folded
             pipe.update(t_blk, v_blk)
+            if (checkpoint_dir is not None and checkpoint_every
+                    and w % checkpoint_every == 0):
+                pipe.checkpoint(checkpoint_dir)
+            if on_window is not None:
+                on_window(pipe, w)
         pipe.finalize(t_end)
         totals = pipe.totals()
     out = []

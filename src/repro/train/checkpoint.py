@@ -64,6 +64,13 @@ def save_checkpoint(ckpt_dir, step: int, tree, *, keep: int = 3,
         shutil.rmtree(final)
     tmp.rename(final)                      # atomic publish
 
+    # sweep stale tmp dirs from crashed saves — retention below only ever
+    # considers published steps, so without this a crash loop leaks one
+    # half-written ``step_*.tmp/`` per attempt, unbounded (ours was just
+    # renamed away, so everything matching here is garbage)
+    for p in ckpt_dir.glob("step_*.tmp"):
+        shutil.rmtree(p, ignore_errors=True)
+
     # retention
     steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
                    if p.is_dir() and p.name.startswith("step_")
@@ -83,14 +90,41 @@ def latest_step(ckpt_dir):
     return max(steps) if steps else None
 
 
+def checkpoint_meta(ckpt_dir, *, step: int = None):
+    """Read a checkpoint's manifest ``meta`` without loading any leaves.
+
+    Returns ``(meta, step)``.  Restore paths whose ``tree_like`` shape
+    depends on save-time structure (e.g. the pipeline's coverage-pattern
+    keys) read this first, build the matching skeleton, then call
+    :func:`restore_checkpoint`.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    manifest = json.loads(
+        (ckpt_dir / f"step_{step:08d}" / "manifest.json").read_text())
+    return manifest["meta"], step
+
+
 def restore_checkpoint(ckpt_dir, tree_like, *, step: int = None,
-                       shardings=None):
+                       shardings=None, cast: bool = False):
     """Restore into the structure of ``tree_like``.
 
     shardings: optional matching pytree of NamedSharding for the CURRENT
     mesh — this is the elastic-rescale path (save on mesh A, restore on
     mesh B): leaves are placed with ``jax.device_put`` under the new
     sharding regardless of the save-time mesh.
+
+    Dtypes must match ``tree_like`` exactly: a float64 carry restored
+    into a float32 skeleton would silently round and break the exact
+    left-fold invariants downstream.  ``cast=True`` opts into an
+    explicit ``astype`` to the skeleton dtype instead of raising.
+
+    Without ``shardings`` the leaves come back as host numpy arrays in
+    their exact checkpoint dtype — ``jax.device_put`` under default
+    (non-x64) jax would canonicalize float64 leaves to float32, the
+    same silent corruption the dtype check above guards against.
     """
     ckpt_dir = Path(ckpt_dir)
     step = latest_step(ckpt_dir) if step is None else step
@@ -115,8 +149,16 @@ def restore_checkpoint(ckpt_dir, tree_like, *, step: int = None,
         arr = np.load(path, allow_pickle=False)
         assert list(arr.shape) == list(like.shape), \
             f"leaf {i}: {arr.shape} vs expected {like.shape}"
+        want = np.dtype(like.dtype)
+        if arr.dtype != want:
+            if not cast:
+                raise TypeError(
+                    f"leaf {i} ({rec['name']}): checkpoint dtype "
+                    f"{arr.dtype} != expected {want} — pass cast=True "
+                    f"to convert explicitly")
+            arr = arr.astype(want)
         if sh_leaves[i] is not None:
             out.append(jax.device_put(arr, sh_leaves[i]))
         else:
-            out.append(jax.device_put(arr))
+            out.append(arr)
     return jax.tree.unflatten(treedef, out), step, manifest["meta"]

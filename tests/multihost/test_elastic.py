@@ -1,0 +1,138 @@
+"""Elastic fault tolerance: kill a multi-host fleet mid-run, respawn it
+with a DIFFERENT process count, and demand bit-identical fused energies.
+
+The acceptance oracle is fold-order determinism: checkpoints are keyed
+by GLOBAL group id, the framed vector sums are exact float64 left folds
+in process-id order under exclusive row ownership, and the resume path
+skips already-folded windows without firing a collective — so a
+2-process run killed at window 5 and resumed on 1, 2 or 4 processes
+must reproduce the uninterrupted run's energies to the BIT, not
+approximately.
+
+Workers are killed with ``os._exit`` from the ``on_window`` hook (every
+process exits at the same window, right after a checkpoint publishes),
+so no worker is ever left blocked in a collective against a dead peer.
+"""
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from multihost.harness import WorkerFailed, run_multihost
+from multihost.simdata import (energy_matrix, shared_grid_and_phases,
+                               sim_groups)
+
+
+def _proc_counts():
+    cap = int(os.environ.get("REPRO_MH_PROCS", "4"))
+    return [p for p in (1, 2, 4) if p <= cap]
+
+
+def _elastic_worker(n_devices, chunk, ckpt_dir, every, kill_at, resume):
+    """One spawned host: simulate the fleet, keep this shard's groups,
+    attribute with checkpointing; optionally die at ``kill_at``."""
+    import os
+    import jax
+    from multihost.simdata import shared_grid_and_phases, sim_groups
+    from repro.distributed.multihost import (
+        CoordinatorCollectives, attribute_energy_fused_multihost)
+    from repro.fleet import assign_groups
+    truth, groups, delays = sim_groups(n_devices)
+    grid, phases = shared_grid_and_phases(groups)
+    sh = assign_groups([len(g) for g in groups], jax.process_count(),
+                       jax.process_index())
+    coll = CoordinatorCollectives.from_jax()
+    local = [groups[g] for g in sh.group_ids]
+    hook = None
+    if kill_at:
+        def hook(pipe, w):
+            if w == kill_at:
+                os._exit(17)     # hard kill: no teardown, no reporting
+    res = attribute_energy_fused_multihost(
+        local, phases, shard=sh, collectives=coll, grid=grid,
+        delays=sh.take_rows(delays), chunk=chunk,
+        checkpoint_dir=ckpt_dir or None, checkpoint_every=every,
+        resume=resume, on_window=hook)
+    from multihost.simdata import energy_matrix
+    return energy_matrix(res)
+
+
+def _inproc_run(n_devices, chunk, ckpt_dir=None, every=0, resume=False):
+    """The same attribution as ``_elastic_worker`` on ONE in-process
+    participant (no spawn): the n_hosts=1 corner of the reshard."""
+    from repro.distributed.multihost import (
+        ThreadCollectives, attribute_energy_fused_multihost)
+    from repro.fleet import assign_groups
+    truth, groups, delays = sim_groups(n_devices)
+    grid, phases = shared_grid_and_phases(groups)
+    sh = assign_groups([len(g) for g in groups], 1, 0)
+    coll = ThreadCollectives(1).participant(0)
+    res = attribute_energy_fused_multihost(
+        [groups[g] for g in sh.group_ids], phases, shard=sh,
+        collectives=coll, grid=grid, delays=sh.take_rows(delays),
+        chunk=chunk, checkpoint_dir=ckpt_dir, checkpoint_every=every,
+        resume=resume)
+    return energy_matrix(res)
+
+
+def test_kill_respawn_reshard_bit_identical(tmp_path):
+    """2-process fleet killed at window 5 (checkpoints every 2 windows,
+    so step 4 is on disk), then resumed at EVERY allowed process count
+    — including counts the checkpoint was never written under.  All
+    resumes are bit-identical to the uninterrupted run and conserve the
+    batch oracle's energy.  5 device groups so every allowed count
+    (1/2/4 hosts) owns at least one group and the split stays ragged."""
+    n_devices, chunk, every, kill_at = 5, 257, 2, 5
+    ckpt = str(tmp_path / "ckpt")
+
+    # the uninterrupted 2-process oracle
+    out = run_multihost(_elastic_worker, 2,
+                        args=(n_devices, chunk, "", 0, 0, False))
+    e_base = np.asarray(out[0])
+    np.testing.assert_array_equal(e_base, np.asarray(out[1]))
+
+    # kill: every worker os._exit(17)s at window 5
+    with pytest.raises(WorkerFailed):
+        run_multihost(_elastic_worker, 2,
+                      args=(n_devices, chunk, ckpt, every, kill_at,
+                            False))
+    # a complete step-4 checkpoint was published, keyed by GLOBAL
+    # group id — one dir per device group plus the shared state
+    root = Path(ckpt)
+    assert (root / "shared" / "step_00000004").is_dir()
+    for gid in range(n_devices):
+        assert (root / f"group_{gid:05d}" / "step_00000004").is_dir()
+
+    # leave: resume on a single in-process host (2 -> 1)
+    e1 = _inproc_run(n_devices, chunk, ckpt_dir=ckpt, resume=True)
+    np.testing.assert_array_equal(e1, e_base)
+
+    # same-count respawn and join (2 -> 4), budget permitting
+    for n_procs in [p for p in _proc_counts() if p > 1]:
+        out = run_multihost(_elastic_worker, n_procs,
+                            args=(n_devices, chunk, ckpt, 0, 0, True))
+        for e in out:
+            np.testing.assert_array_equal(
+                np.asarray(e), e_base,
+                err_msg=f"resume at {n_procs} procs diverged")
+
+    # conservation: the resumed fleet still matches the single-host
+    # batch oracle to <=1e-5 (the parity bar of the multihost suite)
+    from repro.align import attribute_energy_fused
+    truth, groups, delays = sim_groups(n_devices)
+    grid, phases = shared_grid_and_phases(groups)
+    batch = energy_matrix(attribute_energy_fused(
+        groups, phases, grid=grid, delays=delays))
+    rel = np.abs(e1 - batch) / np.maximum(np.abs(batch), 1.0)
+    assert rel.max() <= 1e-5, rel.max()
+
+
+def test_resume_is_cold_start_on_first_boot(tmp_path):
+    """The restart wrapper always passes resume=True; with nothing on
+    disk the multihost path must cold-start, not crash."""
+    n_devices, chunk = 2, 257
+    e_cold = _inproc_run(n_devices, chunk,
+                         ckpt_dir=str(tmp_path / "none"), resume=True)
+    e_plain = _inproc_run(n_devices, chunk)
+    np.testing.assert_array_equal(e_cold, e_plain)

@@ -78,6 +78,16 @@ def test_serve_metrics_gated_in_baselines(compare_mod):
             f"{fname}: conservation parity must gate at float64 roundoff"
 
 
+def test_ft_resume_exact_gated_in_baselines(compare_mod):
+    """Elastic fault tolerance stays gated: BOTH baselines must floor
+    ``resume_exact`` at 1.0 — a killed+resumed streaming run that is
+    not bit-identical to the uninterrupted oracle fails the bench job,
+    on every machine (the metric is 0/1, not a timing)."""
+    for fname in ("baseline.json", "baseline-full.json"):
+        base = json.loads((BENCH_DIR / fname).read_text())
+        assert base["bench_ft"]["floors"]["resume_exact"] >= 1.0, fname
+
+
 def test_floor_gate(compare_mod, tmp_path):
     baseline = {"bench_a": {"us_per_call": 100.0, "parity": {},
                             "floors": {"scan_thr": 1.5,

@@ -136,3 +136,107 @@ def test_straggler_monitor():
         mon.observe(times)
     assert 5 in mon.flagged
     assert len(mon.flagged) == 1
+
+
+def test_stale_tmp_dirs_swept_on_save(tmp_path, tree):
+    """Regression: retention only ever considered PUBLISHED steps, so a
+    crash loop leaked one half-written ``step_*.tmp/`` per attempt
+    forever.  Any successful save must sweep them all."""
+    for s in (2, 5, 9):
+        d = tmp_path / f"step_{s:08d}.tmp"
+        d.mkdir()
+        (d / "leaf_00000.npy").write_bytes(b"garbage")
+    save_checkpoint(tmp_path, 10, tree)
+    leftovers = [p.name for p in tmp_path.iterdir()
+                 if p.name.endswith(".tmp")]
+    assert leftovers == []
+    assert latest_step(tmp_path) == 10
+
+
+def test_dtype_mismatch_raises_and_cast_opts_in(tmp_path):
+    """Regression: restore validated shape+checksum but silently
+    accepted a dtype change — a float64 carry restored into a float32
+    skeleton (or vice versa) breaks the exact-left-fold invariants.
+    Now it raises, and ``cast=True`` converts explicitly."""
+    save_checkpoint(tmp_path, 1, {"a": np.arange(4, dtype=np.float64)})
+    with pytest.raises(TypeError, match="dtype"):
+        restore_checkpoint(tmp_path, {"a": np.zeros(4, np.float32)})
+    restored, _, _ = restore_checkpoint(
+        tmp_path, {"a": np.zeros(4, np.float32)}, cast=True)
+    assert restored["a"].dtype == np.float32
+    np.testing.assert_array_equal(restored["a"], [0, 1, 2, 3])
+
+
+def test_restore_preserves_float64_without_device_put(tmp_path):
+    """Under default (non-x64) jax, ``jax.device_put`` canonicalizes
+    float64 -> float32; the no-shardings restore path must hand back
+    the exact checkpoint dtype."""
+    val = np.array([1.0 + 1e-12, 2.0], np.float64)
+    save_checkpoint(tmp_path, 1, {"a": val})
+    restored, _, _ = restore_checkpoint(tmp_path,
+                                        {"a": np.zeros(2, np.float64)})
+    assert restored["a"].dtype == np.float64
+    np.testing.assert_array_equal(restored["a"], val)
+
+
+def test_restart_budget_decays_after_clean_steps():
+    """Regression: ``restarts`` never decayed, so a long campaign with
+    occasional recovered transients eventually tripped max_restarts.
+    After ``reset_after_steps`` clean steps the budget resets."""
+    fail_at = {3, 10, 17}      # one transient every ~7 steps
+    seen = set()
+
+    def train_one(state, step):
+        if step in fail_at and step not in seen:
+            seen.add(step)
+            raise TrainingFault("node_failure")
+        return state, {"loss": 0.5}
+
+    policy = RestartPolicy(max_restarts=2, reset_after_steps=5)
+    state, step, events = run_with_restarts(
+        lambda: ({}, 0), train_one, n_steps=25,
+        save_fn=lambda *a: None, restore_fn=lambda: None,
+        policy=policy, ckpt_every=100)
+    assert step == 25
+    kinds = [e["kind"] for e in events]
+    assert kinds.count("fault") == 3          # all three recovered
+    assert kinds.count("restart_budget_reset") >= 2
+    # without decay the same schedule must exhaust the budget
+    seen.clear()
+    with pytest.raises(TrainingFault):
+        run_with_restarts(
+            lambda: ({}, 0), train_one, n_steps=25,
+            save_fn=lambda *a: None, restore_fn=lambda: None,
+            policy=RestartPolicy(max_restarts=2, reset_after_steps=0),
+            ckpt_every=100)
+
+
+def test_backoff_is_capped():
+    """Regression: backoff_s * factor**attempt was unbounded — attempt
+    30 at factor 2 is ~17 years of sleep."""
+    p = RestartPolicy(backoff_s=1.0, backoff_factor=2.0,
+                      backoff_max_s=60.0)
+    assert p.backoff(0) == 1.0
+    assert p.backoff(5) == 32.0
+    assert p.backoff(6) == 60.0
+    assert p.backoff(50) == 60.0
+
+
+def test_straggler_median_even_host_count():
+    """Regression: the median used ``sorted(x)[n // 2]`` (upper middle)
+    for even host counts, biasing the center and the MAD high — hosts
+    just under the upper-middle element scored as slow.  With a true
+    even-n median, two symmetric halves score symmetrically."""
+    from repro.distributed.fault_tolerance import _median
+    assert _median([1.0, 2.0, 3.0, 4.0]) == 2.5
+    assert _median([3.0, 1.0]) == 2.0
+    assert _median([5.0, 1.0, 3.0]) == 3.0
+    mon = StragglerMonitor(4, threshold=5.0, patience=1)
+    # two fast, two slightly-slower hosts: nobody is a straggler under
+    # a true median; the old upper-middle median flagged nothing here
+    # either, but it scored hosts 0/1 at deviation < 0 and host 3 at 0
+    # — pin the symmetric scoring directly
+    v = mon.observe([1.0, 1.0, 2.0, 2.0])
+    devs = [round(x.deviation_mads, 6) for x in v]
+    assert devs[0] == devs[1] == -devs[2] == -devs[3]
+    assert not any(x.is_straggler for x in v)

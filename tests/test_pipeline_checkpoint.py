@@ -1,0 +1,238 @@
+"""Checkpointable pipeline carries: kill/resume bit-parity and the
+carry round-trip property (single host; the elastic multi-process side
+lives in tests/multihost/test_elastic.py).
+
+The acceptance oracle is the carry-checkpoint determinism rule: every
+stage carry is exact state of a float64 left fold, so restoring it and
+replaying the remaining windows must reproduce the uninterrupted run's
+fused per-phase energies BIT-identically — not approximately.
+"""
+import numpy as np
+import pytest
+
+from multihost.simdata import (energy_matrix, shared_grid_and_phases,
+                               sim_groups)
+from repro.fleet import DataQualityError, DataQualityPolicy
+from repro.fleet.pipeline import attribute_energy_fused_streaming
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # container has no hypothesis:
+    HAVE_HYPOTHESIS = False           # fall back to a seeded sweep
+
+
+class _Kill(Exception):
+    pass
+
+
+def _killer(at):
+    def hook(pipe, w):
+        if w == at:
+            raise _Kill
+    return hook
+
+
+def _run(groups, grid, phases, truth=None, delays=None, **kw):
+    track = truth is not None
+    return energy_matrix(attribute_energy_fused_streaming(
+        groups, phases, grid=grid, delays=delays,
+        reference=truth if track else None, track=track,
+        window=512, hop=128, **kw))
+
+
+@pytest.mark.parametrize("tracked", [False, True],
+                         ids=["fixed-delays", "tracked"])
+def test_kill_resume_bit_identical(tmp_path, tracked):
+    """Kill at window 7 (checkpoint cadence 3 -> resumes from 6): the
+    resumed run's energies equal the uninterrupted run's to the BIT,
+    for both fixed-delay and online-tracked pipelines."""
+    truth, groups, delays = sim_groups(3)
+    grid, phases = shared_grid_and_phases(groups)
+    kw = (dict(truth=truth) if tracked
+          else dict(delays=delays))
+    base = _run(groups, grid, phases, chunk=257, **kw)
+    with pytest.raises(_Kill):
+        _run(groups, grid, phases, chunk=257, checkpoint_dir=tmp_path,
+             checkpoint_every=3, on_window=_killer(7), **kw)
+    resumed = _run(groups, grid, phases, chunk=257,
+                   checkpoint_dir=tmp_path, resume=True, **kw)
+    np.testing.assert_array_equal(resumed, base)
+
+
+def test_kill_resume_with_health_stage(tmp_path):
+    """The health state machine (streaks, EMAs, pending stats block)
+    checkpoints too: a resumed health-enabled run stays bit-identical."""
+    truth, groups, delays = sim_groups(3)
+    grid, phases = shared_grid_and_phases(groups)
+    base = _run(groups, grid, phases, delays=delays, chunk=257,
+                health=True)
+    with pytest.raises(_Kill):
+        _run(groups, grid, phases, delays=delays, chunk=257, health=True,
+             checkpoint_dir=tmp_path, checkpoint_every=2,
+             on_window=_killer(7))
+    resumed = _run(groups, grid, phases, delays=delays, chunk=257,
+                   health=True, checkpoint_dir=tmp_path, resume=True)
+    np.testing.assert_array_equal(resumed, base)
+
+
+def test_resume_without_checkpoint_is_cold_start(tmp_path):
+    """resume=True against an empty dir runs from scratch (the restart
+    wrapper always passes resume=True; first boot has nothing saved)."""
+    truth, groups, delays = sim_groups(2)
+    grid, phases = shared_grid_and_phases(groups)
+    base = _run(groups, grid, phases, delays=delays, chunk=257)
+    resumed = _run(groups, grid, phases, delays=delays, chunk=257,
+                   checkpoint_dir=tmp_path / "empty", resume=True)
+    np.testing.assert_array_equal(resumed, base)
+
+
+def test_restore_refuses_config_mismatch(tmp_path):
+    """A checkpoint from a differently-shaped pipeline must be
+    rejected, not silently misinterpreted."""
+    truth, groups, delays = sim_groups(2)
+    grid, phases = shared_grid_and_phases(groups)
+    with pytest.raises(_Kill):
+        _run(groups, grid, phases, delays=delays, chunk=257,
+             checkpoint_dir=tmp_path, checkpoint_every=3,
+             on_window=_killer(4))
+    with pytest.raises(AssertionError, match="config mismatch"):
+        _run(groups, grid, phases[:3], delays=delays, chunk=257,
+             checkpoint_dir=tmp_path, resume=True)
+
+
+def _roundtrip_property(seed: int):
+    """Randomized carry states: simulate a random fleet, kill at a
+    random window past the first checkpoint, resume — bit parity."""
+    rng = np.random.default_rng(seed)
+    n_devices = int(rng.integers(1, 4))
+    chunk = int(rng.choice([101, 173, 257]))
+    every = int(rng.integers(1, 4))
+    noise = float(rng.uniform(0.5, 6.0))
+    truth, groups, delays = sim_groups(n_devices, seed=seed,
+                                       span_s=1.5, noise=noise)
+    grid, phases = shared_grid_and_phases(groups, n_phases=4)
+    base = _run(groups, grid, phases, delays=delays, chunk=chunk)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        kill_at = every + int(rng.integers(1, 5))
+        try:
+            _run(groups, grid, phases, delays=delays, chunk=chunk,
+                 checkpoint_dir=d, checkpoint_every=every,
+                 on_window=_killer(kill_at))
+            return          # replay shorter than the kill window: done
+        except _Kill:
+            pass
+        resumed = _run(groups, grid, phases, delays=delays, chunk=chunk,
+                       checkpoint_dir=d, resume=True)
+    np.testing.assert_array_equal(resumed, base)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_checkpoint_roundtrip_property(seed):
+        _roundtrip_property(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 7, 19, 42, 1234, 99991])
+    def test_checkpoint_roundtrip_property(seed):
+        _roundtrip_property(seed)
+
+
+# ---------------------------------------------------------------------------
+# Data-quality policies (tentpole part 3)
+# ---------------------------------------------------------------------------
+
+def _live_pipe(policy=None):
+    """A tiny 2-power-stream pipeline driven by raw update() chunks —
+    the live-ingest path where reordered/dropped samples actually
+    arrive out of order (trace replay flattens them at pack time)."""
+    from repro.fleet.pipeline import StreamingFusedPipeline
+    return StreamingFusedPipeline(
+        [2], [(0.0, 1.0)], grid_origin=0.0, grid_step=0.01,
+        delays=np.zeros(2), track=False, dq_policy=policy)
+
+
+def test_dq_late_samples_counted_on_live_ingest():
+    pipe = _live_pipe(DataQualityPolicy())
+    t1 = np.array([[0.00, 0.01, 0.02, 0.03]] * 2)
+    v1 = np.full((2, 4), 100.0)
+    pipe.update(t1, v1)
+    # row 0 delivers one reordered read (0.015 after 0.04)
+    t2 = np.array([[0.04, 0.015, 0.05, 0.06],
+                   [0.04, 0.045, 0.05, 0.06]])
+    pipe.update(t2, np.full((2, 4), 100.0))
+    late = pipe.ingest.dq_late[:2]
+    assert late[0] == 1 and late[1] == 0
+    assert pipe.ingest.dq_last["late"][0] == 1
+
+
+def test_dq_dropped_samples_counted_from_valid_mask():
+    pipe = _live_pipe(DataQualityPolicy())
+    t = np.array([[0.00, 0.01, 0.02, 0.03]] * 2)
+    valid = np.ones((2, 4), bool)
+    valid[1, 2] = False
+    pipe.update(t, np.full((2, 4), 100.0), valid)
+    assert pipe.ingest.dq_masked[:2].tolist() == [0, 1]
+
+
+def test_dq_policy_raise_on_late_and_dropped():
+    pipe = _live_pipe(DataQualityPolicy(late="raise"))
+    pipe.update(np.array([[0.00, 0.01]] * 2), np.full((2, 2), 1.0))
+    with pytest.raises(DataQualityError, match="late/reordered"):
+        pipe.update(np.array([[0.02, 0.005], [0.02, 0.025]]),
+                    np.full((2, 2), 1.0))
+    pipe = _live_pipe(DataQualityPolicy(dropped="raise"))
+    bad = np.ones((2, 2), bool)
+    bad[0, 1] = False
+    with pytest.raises(DataQualityError, match="dropped"):
+        pipe.update(np.array([[0.00, 0.01]] * 2),
+                    np.full((2, 2), 1.0), bad)
+
+
+def test_dq_policy_coverage_flag_and_raise():
+    """A sensor that stops publishing mid-run drops its window
+    coverage: the flag policy surfaces it, the raise policy aborts."""
+    import dataclasses
+    truth, groups, delays = sim_groups(2, span_s=1.5)
+    groups = [list(g) for g in groups]
+    tr = groups[1][1]
+    n_keep = len(tr.t_measured) // 3   # ends at 1/3 of the span
+    groups[1][1] = dataclasses.replace(
+        tr, t_measured=tr.t_measured[:n_keep].copy(),
+        t_read=tr.t_read[:n_keep].copy(),
+        value=tr.value[:n_keep].copy())
+    grid, phases = shared_grid_and_phases(groups, n_phases=4)
+    # the dead sensor stalls the emit frontier, so other rows pile up
+    # samples until the flush: a wide tail keeps them all answerable
+    out, pipe = attribute_energy_fused_streaming(
+        groups, phases, grid=grid, delays=delays, chunk=257, tail=4096,
+        dq_policy=DataQualityPolicy(min_coverage=0.9), return_pipe=True)
+    assert pipe.fuse.dq_low_coverage[3]     # row 3 = device 1's power
+    assert pipe.fuse.dq_last_coverage[3] < 0.9
+    with pytest.raises(DataQualityError, match="min_coverage"):
+        attribute_energy_fused_streaming(
+            groups, phases, grid=grid, delays=delays, chunk=257,
+            tail=4096,
+            dq_policy=DataQualityPolicy(min_coverage=0.9,
+                                        coverage="raise"))
+
+
+def test_dq_registry_source_exports_flags():
+    from repro.health.registry import HealthRegistry
+    truth, groups, delays = sim_groups(2, span_s=1.5)
+    grid, phases = shared_grid_and_phases(groups, n_phases=4)
+    reg = HealthRegistry()
+    attribute_energy_fused_streaming(
+        groups, phases, grid=grid, delays=delays, chunk=257,
+        dq_policy=DataQualityPolicy(), registry=reg)
+    names = {m.name for m in reg.collect()}
+    assert {"ingest_late_samples_total", "ingest_dropped_samples_total",
+            "window_coverage_frac", "dq_flag"} <= names
+
+
+def test_dq_policy_validates_fields():
+    with pytest.raises(AssertionError):
+        DataQualityPolicy(late="explode")
+    with pytest.raises(AssertionError):
+        DataQualityPolicy(min_coverage=1.5)

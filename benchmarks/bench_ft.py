@@ -18,6 +18,8 @@ import numpy as np
 
 from benchmarks.bench_stream import make_groups
 from benchmarks.common import smoke, timed
+from repro.fleet.config import (CheckpointConfig, PipelineConfig,
+                                StreamConfig, TrackConfig)
 
 N_DEVICES = smoke(16, 4)
 CHUNK = smoke(2048, 512)
@@ -43,7 +45,13 @@ def run():
     edges = np.linspace(float(grid[0]), float(grid[-1]), N_PHASES + 1)
     phases = [(f"p{k}", float(a), float(b))
               for k, (a, b) in enumerate(zip(edges[:-1], edges[1:]))]
-    kw = dict(grid=grid, delays=d_all, chunk=CHUNK)
+    def _cfg(**ck):
+        return PipelineConfig(
+            stream=StreamConfig(grid=grid, chunk=CHUNK),
+            track=TrackConfig(delays=d_all),
+            checkpoint=CheckpointConfig(**ck))
+
+    kw = dict(config=_cfg())
 
     # the uninterrupted oracle (and the replay-window count)
     (res, pipe0), base_us = timed(
@@ -82,12 +90,12 @@ def run():
 
         try:
             attribute_energy_fused_streaming(
-                groups, phases, checkpoint_dir=dir_b,
-                checkpoint_every=every, on_window=killer, **kw)
+                groups, phases, on_window=killer,
+                config=_cfg(dir=dir_b, every=every))
         except _Kill:
             pass
         res_r = attribute_energy_fused_streaming(
-            groups, phases, checkpoint_dir=dir_b, resume=True, **kw)
+            groups, phases, config=_cfg(dir=dir_b, resume=True))
         resume_exact = float(np.array_equal(_energy(res_r), e_base))
     finally:
         shutil.rmtree(dir_a, ignore_errors=True)

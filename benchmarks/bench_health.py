@@ -15,6 +15,8 @@ import numpy as np
 
 from benchmarks.bench_stream import make_groups
 from benchmarks.common import smoke, timed
+from repro.fleet.config import (PipelineConfig, StreamConfig,
+                                TrackConfig)
 
 N_DEVICES = smoke(16, 4)
 SENSORS_PER = 2
@@ -63,16 +65,21 @@ def run():
               for k, (a, b) in enumerate(zip(edges[:-1], edges[1:]))]
     state = {}
 
+    def _cfg(health=None):
+        return PipelineConfig(
+            stream=StreamConfig(grid=grid, chunk=CHUNK),
+            track=TrackConfig(delays=d_all), health=health)
+
     def plain_path():
         state["plain"] = attribute_energy_fused_streaming(
-            groups, phases, grid=grid, delays=d_all, chunk=CHUNK)
+            groups, phases, config=_cfg())
 
     registry = HealthRegistry()
 
     def health_path():
         state["health"] = attribute_energy_fused_streaming(
-            groups, phases, grid=grid, delays=d_all, chunk=CHUNK,
-            health=True, registry=registry)
+            groups, phases, config=_cfg(health=True),
+            registry=registry)
 
     plain_s, health_s, thr = _best_pair(plain_path, health_path, REPEAT)
 
@@ -93,8 +100,7 @@ def run():
                        recover_after=1, min_slots=8,
                        bias_limit_w=15.0, rms_limit_w=60.0)
     _, pipe = attribute_energy_fused_streaming(
-        faulty, phases, grid=grid, delays=d_all, chunk=CHUNK,
-        health=cfg, return_pipe=True)
+        faulty, phases, config=_cfg(health=cfg), return_pipe=True)
     hs = pipe.health_stage
     evs = [e for e in hs.events if e.name == "d1_power"]
     assert evs, "stuck sensor produced no health events"

@@ -1,0 +1,164 @@
+"""Real-sensor ingest overhead: prioritized reads, cache, fallback.
+
+The ingest ISSUE's perf surface: a :class:`PrioritizedIngest` read on
+the happy path is one backend call plus bookkeeping (microseconds —
+real tool invocations dominate by orders of magnitude), a cached serve
+must stay cheaper than a live read, and falling down the priority list
+costs one failed attempt, not a stall.  Two machine-independent 0/1
+floors ride in the baselines:
+
+  ``fallback_exact``  a scripted mid-sequence backend kill loses no
+                      read and repeats none — the value stream through
+                      the prioritized stack is exactly the uninterrupted
+                      sequence;
+  ``cache_exact``     a cached serve returns exactly the last good
+                      value, flagged ``cached=True``.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import smoke, timed
+from repro.core.measurement_model import SensorSpec
+from repro.core.sensors import SensorTrace
+from repro.ingest import (BackendError, IngestPolicy, MetricSpec,
+                          PrioritizedIngest, Reading, SensorBackend,
+                          SimBackend)
+
+N_READS = smoke(20000, 2000)
+N_SAMPLES = smoke(200_000, 20_000)     # replay trace length (searchsorted)
+N_KILL = smoke(2000, 500)              # reads in the kill-exactness run
+
+
+class _Seq(SensorBackend):
+    """Deterministic shared-sequence backend: every successful read
+    (from whichever backend serves it) advances one shared counter."""
+
+    def __init__(self, name, shared, fail_after=None):
+        super().__init__()
+        self.name = name
+        self._shared = shared
+        self._fail_after = fail_after
+        self.reads = 0
+
+    def _discover(self):
+        return [MetricSpec("m", "energy_cum", wrap_range_j=1e6,
+                           resolution_j=1e-6, source=self.name)]
+
+    def read(self, metric):
+        self.reads += 1
+        if self._fail_after is not None \
+                and self.reads > self._fail_after:
+            raise BackendError(f"{self.name} killed")
+        self._shared[0] += 1.0
+        t = self._clock()
+        return Reading(metric, t, t, self._shared[0], self.name)
+
+
+class _Dead(SensorBackend):
+    """Discovers a metric, then fails every read."""
+
+    def __init__(self, name="dead"):
+        super().__init__()
+        self.name = name
+
+    def _discover(self):
+        return [MetricSpec("gpu0.energy", "energy_cum",
+                           wrap_range_j=1e6, resolution_j=1e-6,
+                           source=self.name)]
+
+    def read(self, metric):
+        raise BackendError(f"{self.name} is down")
+
+
+def _trace(n):
+    t = np.linspace(0.0, 600.0, n)
+    spec = SensorSpec(name="gpu0.energy", scope="chip",
+                      kind="energy_cum", quantum=1e-6,
+                      wrap_range_j=1e6)
+    return SensorTrace("gpu0.energy", spec, t, t.copy(), 100.0 * t)
+
+
+def _per_read_us(ingest, n):
+    ingest.read("gpu0.energy")                  # warm discovery/caches
+    t0 = time.perf_counter()
+    for _ in range(n):
+        ingest.read("gpu0.energy")
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    tr = _trace(N_SAMPLES)
+
+    # happy path: one live backend (real searchsorted work per read)
+    direct = PrioritizedIngest([SimBackend({"gpu0.energy": tr},
+                                           speed=0.25)])
+    read_us = _per_read_us(direct, N_READS)
+
+    # cached serves: the only backend dies after its first good read
+    class _Once(SimBackend):
+        def read(self, metric, _n=[0]):
+            _n[0] += 1
+            if _n[0] > 1:
+                raise BackendError("sim died")
+            return super().read(metric)
+
+    cached_ing = PrioritizedIngest(
+        [_Once({"gpu0.energy": tr}, speed=0.25)],
+        policy=IngestPolicy(stale_ttl_s=1e9, error_budget=10 ** 9))
+    good = cached_ing.read("gpu0.energy")
+    r = cached_ing.read("gpu0.energy")
+    cache_exact = float(r.cached and r.value == good.value)
+    cached_us = _per_read_us(cached_ing, N_READS)
+
+    # fallback: a dead preferred backend in front, never demoted, so
+    # EVERY read pays the worst-case failed attempt before falling down
+    backup = SimBackend({"gpu0.energy": tr}, speed=0.25)
+    backup.name = "sim-backup"
+    fb = PrioritizedIngest(
+        [_Dead(), backup],
+        policy=IngestPolicy(error_budget=10 ** 9))
+    fallback_us = _per_read_us(fb, N_READS)
+
+    # exactness: kill the primary mid-sequence; the merged stream must
+    # be the exact uninterrupted sequence (no lost or repeated read)
+    shared = [0.0]
+    kill_at = N_KILL // 3
+    a = _Seq("seq-a", shared, fail_after=kill_at)
+    b = _Seq("seq-b", shared)
+    ing = PrioritizedIngest([a, b], policy=IngestPolicy(
+        error_budget=1, retry_after_s=1e9))
+    vals = [ing.read("m").value for _ in range(N_KILL)]
+    fallback_exact = float(
+        vals == [float(i) for i in range(1, N_KILL + 1)]
+        and ing.counters["seq-b"]["fallbacks"] == N_KILL - kill_at)
+
+    return {"read_us": read_us, "cached_us": cached_us,
+            "fallback_us": fallback_us, "fallback_x":
+            fallback_us / max(read_us, 1e-9),
+            "cache_exact": cache_exact,
+            "fallback_exact": fallback_exact}
+
+
+def main():
+    out, us = timed(run)
+    print(f"# prioritized ingest — {N_READS} reads/path, "
+          f"{N_SAMPLES} replay samples")
+    print(f"  live read:    {out['read_us']:8.2f} us/read")
+    print(f"  cached serve: {out['cached_us']:8.2f} us/read "
+          f"(exact last-good: {bool(out['cache_exact'])})")
+    print(f"  fallback:     {out['fallback_us']:8.2f} us/read "
+          f"(x{out['fallback_x']:.2f} of live; "
+          f"exact sequence: {bool(out['fallback_exact'])})")
+    assert out["cache_exact"] == 1.0
+    assert out["fallback_exact"] == 1.0
+    derived = (f"read_us={out['read_us']:.2f},"
+               f"cached_us={out['cached_us']:.2f},"
+               f"fallback_us={out['fallback_us']:.2f},"
+               f"cache_exact={out['cache_exact']:.1f},"
+               f"fallback_exact={out['fallback_exact']:.1f}")
+    return us, derived
+
+
+if __name__ == "__main__":
+    main()

@@ -90,6 +90,7 @@ def run():
     from repro.core import NodeFabric, ToolSpec, phase_power
     from repro.core.measurement_model import CHIP_IDLE_W
     from repro.core.power_model import occupancy_power
+    from repro.fleet.config import PipelineConfig, TrackConfig
     meng = ServeEngine(model, params, batch_slots=SLOTS,
                        max_len=max_len, flush_interval=FLUSH)
     meng.run(_workload(cfg, n=N_METER_REQ, seed=1))
@@ -105,13 +106,15 @@ def run():
     traces = NodeFabric(chip_truths=[truth] * 2).sample_all(
         ToolSpec(), seed=0)
 
+    cfg = PipelineConfig(track=TrackConfig(track=False))
+
     def plain_attr():
         state["phases"] = meng.attribute_phases(
-            traces, t_shift=lead, fuse=True, streaming=True, track=False)
+            traces, t_shift=lead, fuse=True, streaming=True, config=cfg)
 
     def meter_attr():
         state["report"] = meng.attribute_requests(
-            traces, t_shift=lead, track=False)
+            traces, t_shift=lead, config=cfg)
 
     plain_s, meter_s, meter_thr = _best_pair(plain_attr, meter_attr, 2)
     report = state["report"]

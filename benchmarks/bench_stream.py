@@ -164,12 +164,16 @@ def run():
             for d in range(N_DEVICES)]
 
     # the fused-scan engine: same replay, one jitted lax.scan
+    from repro.fleet.config import (PipelineConfig, StreamConfig,
+                                    TrackConfig)
     from repro.fleet.pipeline import attribute_energy_fused_streaming
 
     def scan_path():
         state["scan"] = attribute_energy_fused_streaming(
-            groups, phases, grid=grid, delays=d_all, chunk=CHUNK,
-            engine="scan")
+            groups, phases, config=PipelineConfig(
+                stream=StreamConfig(grid=grid, chunk=CHUNK,
+                                    engine="scan"),
+                track=TrackConfig(delays=d_all)))
 
     batch_s, batch_peak = _timed_peak(batch_path, REPEAT)
     stream_s, stream_peak = _timed_peak(stream_path, REPEAT)

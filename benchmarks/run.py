@@ -27,6 +27,7 @@ BENCHES = [
     "bench_align",              # cross-sensor align+fuse vs host loop
     "bench_stream",             # streaming fused pipeline vs batch replay
     "bench_health",             # health-stage overhead + detect latency
+    "bench_ingest",             # prioritized real-sensor ingest reads
     "bench_serve",              # continuous batching + request metering
     "bench_multihost",          # multi-host weak scaling (spawn harness)
     "bench_ft",                 # carry checkpoint/restore + exact resume

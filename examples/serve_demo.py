@@ -15,7 +15,6 @@ Four attribution paths over the same serving run:
 
   PYTHONPATH=src python examples/serve_demo.py
 """
-import threading
 import time
 
 import jax
@@ -27,6 +26,7 @@ from repro.core.measurement_model import CHIP_IDLE_W
 from repro.core.power_model import occupancy_power
 from repro.core.reconstruction import unwrap_counter
 from repro.fleet import FleetStream
+from repro.ingest import AsyncFleetIngest, SimulatedSMIReader
 from repro.models import Model
 from repro.serve.engine import Request, ServeEngine
 
@@ -34,123 +34,6 @@ OCC = {"admission": (0.0, 0.05, 0.0), "prefill": (1.0, 0.5, 0.1),
        "decode": (0.15, 1.0, 0.1)}
 
 CHUNK = 64          # ingest flush width (columns per FleetStream.update)
-
-
-class SimulatedSMIReader:
-    """rocm-smi / amd-smi poll idiom: each ``poll`` returns the samples a
-    monitoring loop would have read since the last call, replaying a
-    recorded SensorTrace against the wall clock at ``speed``x."""
-
-    def __init__(self, trace, speed: float = 8.0):
-        self._tr = trace
-        self._speed = speed
-        self._i = 0
-        self._t0_wall = None
-
-    def poll(self, now_wall: float):
-        """-> (t_measured, value) arrays of newly visible samples."""
-        if self._t0_wall is None:
-            self._t0_wall = now_wall
-        t_sim = float(self._tr.t_read[0]) \
-            + (now_wall - self._t0_wall) * self._speed
-        j = int(np.searchsorted(self._tr.t_read, t_sim, side="right"))
-        lo, self._i = self._i, max(j, self._i)
-        return self._tr.t_measured[lo:self._i], self._tr.value[lo:self._i]
-
-    @property
-    def drained(self) -> bool:
-        return self._i >= len(self._tr)
-
-
-class AsyncFleetIngest:
-    """LiveSampler-style polling thread feeding a streaming attributor.
-
-    A dedicated thread polls every reader at a fixed cadence, buffers
-    per-device samples, and flushes fixed-width (fleet, CHUNK) blocks
-    into ``stream.update`` — a ``FleetStream`` (counter chunks) or a
-    ``StreamingFusedPipeline`` (mixed multi-sensor chunks); rows short
-    of a full chunk pad by replicating their last sample (zero-width
-    intervals — exactly zero energy, the packing subsystem's
-    convention), which also keeps every row's wall-clock span aligned —
-    the contract the streaming regrid frontier relies on.  ``stop()``
-    drains the buffers and joins the thread.
-    """
-
-    def __init__(self, readers, stream, t0: float,
-                 chunk: int = CHUNK, interval_s: float = 2e-3):
-        self._readers = readers
-        self._stream = stream
-        self._t0 = t0
-        self._chunk = chunk
-        self._interval = interval_s
-        self._stop = threading.Event()
-        self._thread = None
-        self._buf = [([], []) for _ in readers]      # (times, energies)
-        self._last = [None] * len(readers)           # carry (t, e)
-        self.n_polls = 0
-        self.n_chunks = 0
-        self.bounds = [None] * len(readers)  # (t_first, e_first, t, e)
-
-    def start(self):
-        self._stop.clear()
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
-        return self
-
-    def _run(self):
-        while not self._stop.is_set():
-            self._poll_once()
-            if max(len(b[0]) for b in self._buf) >= self._chunk \
-                    and all(self._last):
-                self._flush()
-            if all(r.drained for r in self._readers):
-                break
-            self._stop.wait(self._interval)
-
-    def _poll_once(self):
-        now = time.perf_counter()
-        self.n_polls += 1
-        for i, r in enumerate(self._readers):
-            tm, val = r.poll(now)
-            if len(tm) == 0:
-                continue
-            self._buf[i][0].extend(tm - self._t0)
-            self._buf[i][1].extend(val)
-            self._last[i] = (self._buf[i][0][-1], self._buf[i][1][-1])
-            first = self.bounds[i][:2] if self.bounds[i] \
-                else (tm[0] - self._t0, val[0])
-            self.bounds[i] = (*first, tm[-1] - self._t0, val[-1])
-
-    def _flush(self):
-        f = len(self._readers)
-        t_blk = np.zeros((f, self._chunk), np.float64)
-        e_blk = np.zeros((f, self._chunk), np.float64)
-        for i, (ts, es) in enumerate(self._buf):
-            k = min(len(ts), self._chunk)
-            t_blk[i, :k] = ts[:k]
-            e_blk[i, :k] = es[:k]
-            del ts[:k], es[:k]
-            if k < self._chunk:              # replicate-last padding
-                # k == 0 (row had no new samples) falls back on the
-                # carried last sample — _run only flushes once every
-                # row has one, so _last[i] is always set here
-                lt, le = (t_blk[i, k - 1], e_blk[i, k - 1]) if k \
-                    else self._last[i]
-                t_blk[i, k:] = lt
-                e_blk[i, k:] = le
-        self._stream.update(t_blk.astype(np.float32),
-                            e_blk.astype(np.float32))
-        self.n_chunks += 1
-
-    def stop(self):
-        """Signal, join, drain remaining buffers -> the FleetStream."""
-        self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=10.0)
-        self._poll_once()                    # anything left in the replay
-        while any(len(b[0]) for b in self._buf):
-            self._flush()
-        return self
 
 
 def main():
@@ -201,9 +84,8 @@ def main():
     windows = [(a + lead - t0, b + lead - t0) for _, a, b in phases]
     windows.append((0.0, span))              # full span: conservation
     stream = FleetStream(windows, len(chip_list),
-                         wrap_period=[  # counters wrap at 2**bits quanta
-                             (2.0 ** tr.spec.wrap_bits) * tr.spec.quantum
-                             if tr.spec.wrap_bits else 0.0
+                         wrap_period=[  # backend-DECLARED wrap period
+                             tr.spec.wrap_period_j
                              for tr in chip_list])
     readers = [SimulatedSMIReader(tr) for tr in chip_list]
     ingest = AsyncFleetIngest(readers, stream, t0).start()
@@ -222,10 +104,10 @@ def main():
     # energy must equal the counter's unwrapped ΔE over what was ingested
     for i, tr in enumerate(chip_list):
         tf, ef, tl, el = ingest.bounds[i]
-        de = float(np.diff(unwrap_counter(np.asarray([ef, el]),
-                                          tr.spec.wrap_bits,
-                                          tr.spec.quantum))[0]) \
-            if tr.spec.wrap_bits else el - ef
+        de = float(np.diff(unwrap_counter(
+            np.asarray([ef, el]),
+            period=tr.spec.wrap_period_j))[0]) \
+            if tr.spec.wrap_period_j else el - ef
         got = float(totals[i, len(phases)])
         assert abs(got - de) <= 2e-3 * max(abs(de), 1.0) + 0.5, \
             (tr.name, got, de)
@@ -253,9 +135,11 @@ def main():
 
     # same numbers through the streaming stage pipeline (replayed in
     # chunks, O(fleet x chunk) memory, delays tracked on windows)
-    fused_stream = engine.attribute_phases(traces, t_shift=lead,
-                                           fuse=True, reference=truth,
-                                           streaming=True, chunk=512)
+    from repro.fleet.config import PipelineConfig, StreamConfig
+    fused_stream = engine.attribute_phases(
+        traces, t_shift=lead, fuse=True, reference=truth,
+        streaming=True, config=PipelineConfig(
+            stream=StreamConfig(chunk=512)))
     print("per-phase serving energy (FUSED, streaming replay):")
     for dev, row in fused_stream.items():
         line = "  ".join(f"{p.phase} {p.energy_j:7.2f} J" for p in row)
@@ -275,8 +159,7 @@ def main():
         [2] * 4, [(a + lead - t0f, b + lead - t0f) for _, a, b in phases],
         grid_origin=0.0, grid_step=0.5 * float(cad),
         kind_row=[tr.spec.is_cumulative for tr in flat],
-        wrap_period=[(2.0 ** tr.spec.wrap_bits) * tr.spec.quantum
-                     if tr.spec.wrap_bits else 0.0 for tr in flat],
+        wrap_period=[tr.spec.wrap_period_j for tr in flat],
         reference=lambda t: truth.power_at(t + t0f),
         window=2048, hop=512, max_lag=256, tail=1024)
     readers = [SimulatedSMIReader(tr) for tr in flat]

@@ -42,8 +42,7 @@ def _cum_energy_at(trace: SensorTrace, times):
     """Unwrapped cumulative energy, linearly interpolated at `times`."""
     ch = trace.changed_mask()
     t = trace.t_measured[ch]
-    e = unwrap_counter(trace.value[ch], trace.spec.wrap_bits,
-                       trace.spec.quantum)
+    e = unwrap_counter(trace.value[ch], period=trace.spec.wrap_period_j)
     keep = np.concatenate([[True], np.diff(t) > 0])
     return np.interp(times, t[keep], e[keep])
 

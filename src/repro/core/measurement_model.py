@@ -56,6 +56,11 @@ class SensorSpec:
     drift_ppm: float = 0.0
     quantum: float = 1.0          # value quantization (uJ for energy, W)
     wrap_bits: int = 0            # cumulative counters wrap at 2**bits
+    # declared wrap range in value units (e.g. RAPL max_energy_range_uj
+    # scaled to J): set when the source DECLARES an arbitrary wrap
+    # period instead of a power-of-two tick count.  Overrides
+    # 2**wrap_bits * quantum; consumers must use ``wrap_period_j``.
+    wrap_range_j: float = 0.0
     # stage 2: driver publication
     driver_refresh_s: float = 1e-3
     driver_jitter_s: float = 5e-5
@@ -67,6 +72,21 @@ class SensorSpec:
     @property
     def is_cumulative(self) -> bool:
         return self.kind == "energy_cum"
+
+    @property
+    def wrap_period_j(self) -> float:
+        """Counter wrap period in value units (0.0 = no wrap).
+
+        The ingest-backend invariant: this is always DECLARED — either
+        directly (``wrap_range_j``, e.g. RAPL's max_energy_range_uj)
+        or as ticks x quantum (``2**wrap_bits * quantum``, e.g. the
+        rocm-smi 64-bit accumulator) — never inferred from data.
+        """
+        if self.wrap_range_j > 0.0:
+            return self.wrap_range_j
+        if self.wrap_bits:
+            return (2.0 ** self.wrap_bits) * self.quantum
+        return 0.0
 
 
 @dataclasses.dataclass(frozen=True)

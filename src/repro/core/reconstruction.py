@@ -53,11 +53,18 @@ class PowerSeries:
         return cum_at(np.asarray(t_b)) - cum_at(np.asarray(t_a))
 
 
-def unwrap_counter(values, wrap_bits, quantum):
-    """Undo modulo-2**bits wraparound of a cumulative counter."""
-    if not wrap_bits:
+def unwrap_counter(values, wrap_bits=0, quantum=1.0, *, period=None):
+    """Undo cumulative-counter wraparound.
+
+    The wrap period is DECLARED by the caller — either explicitly via
+    ``period`` (value units, e.g. RAPL's max_energy_range_uj in J) or
+    as ``2**wrap_bits * quantum`` ticks (e.g. the SMI 64-bit energy
+    accumulator) — never inferred from the observed deltas.
+    """
+    if period is None:
+        period = (2.0 ** wrap_bits) * quantum if wrap_bits else 0.0
+    if not period:
         return np.asarray(values, np.float64)
-    period = (2.0 ** wrap_bits) * quantum
     v = np.asarray(values, np.float64)
     jumps = np.diff(v) < -0.5 * period
     wraps = np.concatenate([[0.0], np.cumsum(jumps.astype(np.float64))])
@@ -70,8 +77,7 @@ def delta_e_over_delta_t(trace: SensorTrace, *, use_t_measured=True,
     assert trace.spec.is_cumulative, f"{trace.name} is not an energy counter"
     ch = trace.changed_mask()
     t = (trace.t_measured if use_t_measured else trace.t_read)[ch]
-    e = unwrap_counter(trace.value[ch], trace.spec.wrap_bits,
-                       trace.spec.quantum)
+    e = unwrap_counter(trace.value[ch], period=trace.spec.wrap_period_j)
     # drop non-monotonic timestamps (sensor timestamp jitter can reorder)
     keep = np.concatenate([[True], np.diff(t) > 0])
     t, e = t[keep], e[keep]

@@ -331,24 +331,12 @@ def global_fleet_spec(ndim: int) -> P:
 # ---------------------------------------------------------------------------
 
 def attribute_energy_fused_multihost(local_groups, phases, *, shard,
-                                     collectives, chunk: int = 1024,
+                                     collectives, config=None,
                                      reference=None, corrections=None,
-                                     grid=None, grid_step=None,
-                                     delays=None, track: bool = None,
-                                     window: int = 2048, hop: int = 512,
-                                     max_lag: int = 64, ema: float = 0.5,
-                                     tail: int = None,
-                                     var_floor: float = 0.25,
-                                     use_t_measured: bool = True,
-                                     dtype=np.float32, interpret=None,
-                                     use_kernel=None, host: bool = False,
                                      record: bool = False,
                                      return_pipe: bool = False,
-                                     health=None, registry=None,
-                                     checkpoint_dir=None,
-                                     checkpoint_every: int = 0,
-                                     resume: bool = False,
-                                     on_window=None, dq_policy=None):
+                                     registry=None, on_window=None,
+                                     **legacy):
     """Fleet-wide fused per-phase energy, rows sharded across hosts.
 
     The multi-host counterpart of
@@ -357,7 +345,11 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
     ``shard.group_ids`` order — each inner list is every sensor
     observing one device) plus the shared ``shard``/``collectives``;
     all hosts return the SAME fleet-wide result — one ``[PhaseEnergy]``
-    per GLOBAL device group.
+    per GLOBAL device group.  ``config`` is the same
+    ``fleet.config.PipelineConfig`` bundle the single-host entry point
+    takes (the scan engine is single-host only — multi-host runs are
+    always windowed); the pre-config flat kwargs still resolve
+    bit-identically but emit a ``DeprecationWarning``.
 
     Every origin the float32 packing depends on (shared t0, the counter
     sub-pack origin, the output grid, the replay span and cadence) is
@@ -404,10 +396,29 @@ def attribute_energy_fused_multihost(local_groups, phases, *, shard,
     ``fleet.pipeline.DataQualityPolicy`` for ingest/fuse accounting.
     """
     from repro.core.attribution import PhaseEnergy
+    from repro.fleet.config import resolve_config
     from repro.fleet.pipeline import (StreamingFusedPipeline,
                                       _min_cadence, default_tail,
                                       pack_stream_rows,
                                       stream_row_windows)
+    cfg = resolve_config(config, legacy,
+                         "attribute_energy_fused_multihost")
+    assert cfg.stream.engine == "windowed", \
+        "multi-host attribution drives the windowed engine only"
+    chunk = cfg.stream.chunk
+    grid, grid_step = cfg.stream.grid, cfg.stream.grid_step
+    dtype, var_floor = cfg.stream.dtype, cfg.stream.var_floor
+    use_t_measured = cfg.stream.use_t_measured
+    interpret, use_kernel = cfg.stream.interpret, cfg.stream.use_kernel
+    host = cfg.stream.host
+    track, delays = cfg.track.track, cfg.track.delays
+    window, hop = cfg.track.window, cfg.track.hop
+    max_lag, ema = cfg.track.max_lag, cfg.track.ema
+    tail = cfg.track.tail
+    checkpoint_dir = cfg.checkpoint.dir
+    checkpoint_every = cfg.checkpoint.every
+    resume = cfg.checkpoint.resume
+    health, dq_policy = cfg.health, cfg.dq
     groups = [list(g) for g in local_groups]
     assert len(groups) == len(shard.group_ids), \
         (len(groups), len(shard.group_ids))

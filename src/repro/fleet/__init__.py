@@ -31,6 +31,9 @@ per-trace Python loops.  Multi-host runs split the fleet by device group
 (``assign_groups`` -> ``HostShard``) and attribute through
 ``repro.distributed.multihost.attribute_energy_fused_multihost``.
 """
+from repro.fleet.config import (CheckpointConfig,  # noqa: F401
+                                PipelineConfig, StreamConfig,
+                                TrackConfig, resolve_config)
 from repro.fleet.packing import (HostShard, PackedFleet,  # noqa: F401
                                  assign_groups, pack_traces,
                                  shard_from_assignment, unpack_series)

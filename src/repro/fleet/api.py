@@ -74,7 +74,7 @@ def attribute_energy_fleet(traces, phases, *, corrections=None,
 
 
 def attribute_energy_fused(trace_groups, phases, *, streaming=False,
-                           **kw):
+                           config=None, **kw):
     """Per-phase energy on the FUSED cross-sensor stream of each device.
 
     trace_groups: [[SensorTrace, ...], ...] — all sensors observing one
@@ -121,7 +121,7 @@ def attribute_energy_fused(trace_groups, phases, *, streaming=False,
         from repro.distributed.multihost import (
             attribute_energy_fused_multihost)
         return attribute_energy_fused_multihost(trace_groups, phases,
-                                                **kw)
+                                                config=config, **kw)
     assert kw.get("shard") is None, \
         "shard without collectives — a multi-host run needs both"
     kw.pop("collectives", None)
@@ -129,6 +129,10 @@ def attribute_energy_fused(trace_groups, phases, *, streaming=False,
     if streaming:
         from repro.fleet.pipeline import attribute_energy_fused_streaming
         return attribute_energy_fused_streaming(trace_groups, phases,
-                                                **kw)
+                                                config=config, **kw)
+    if config is not None:
+        raise TypeError("config= drives the streaming pipeline — pass "
+                        "streaming=True (the batch align path keeps "
+                        "its own keyword surface)")
     from repro.align import attribute_energy_fused as _fused
     return _fused(trace_groups, phases, **kw)

@@ -183,12 +183,13 @@ def pack_traces(traces, *, use_t_measured: bool = True,
         k = len(tr)
         t = (tr.t_measured if use_t_measured else tr.t_read)
         v = tr.value
-        if tr.spec.wrap_bits:
+        if tr.spec.wrap_period_j:
             # unwrap in float64 at ingest: packed energy then spans only
             # the traversed ΔE, which float32 can hold (a huge-period
             # counter that wraps mid-window cannot be rebased any other
-            # way without losing ΔE to rounding)
-            v = unwrap_counter(v, tr.spec.wrap_bits, tr.spec.quantum)
+            # way without losing ΔE to rounding).  The period is the
+            # spec's DECLARED one (wrap_range_j or 2**bits * quantum).
+            v = unwrap_counter(v, period=tr.spec.wrap_period_j)
         e0[i] = v[0]
         energy[i, :k] = v - e0[i]
         times[i, :k] = t - t0

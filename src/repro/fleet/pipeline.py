@@ -73,6 +73,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.fleet.config import resolve_config
 from repro.fleet.packing import ROW_ALIGN, _round_up, pack_traces
 from repro.fleet.reconstruct import auto_interpret
 
@@ -3041,36 +3042,32 @@ def attribute_totals_fused_scan(rows: StreamRows, group_sizes, phases,
 
 
 def attribute_energy_fused_streaming(trace_groups, phases, *,
-                                     chunk: int = 1024, reference=None,
-                                     corrections=None, grid=None,
-                                     grid_step=None, delays=None,
-                                     track: bool = None, window: int = 2048,
-                                     hop: int = 512, max_lag: int = 64,
-                                     ema: float = 0.5, tail: int = None,
-                                     var_floor: float = 0.25,
-                                     use_t_measured: bool = True,
-                                     dtype=np.float32, interpret=None,
-                                     use_kernel=None, host: bool = False,
-                                     engine: str = "windowed",
-                                     health=None, registry=None,
+                                     config=None, reference=None,
+                                     corrections=None, registry=None,
                                      meter=None,
                                      return_pipe: bool = False,
-                                     checkpoint_dir=None,
-                                     checkpoint_every: int = 0,
-                                     resume: bool = False,
                                      on_window=None,
-                                     dq_policy=None) -> list:
+                                     **legacy) -> list:
     """Streaming-first counterpart of ``align.attribute_energy_fused``.
 
     trace_groups: [[SensorTrace, ...], ...] — all sensors observing one
     device per group.  The traces are packed once (raw, no
     reconstruction) and REPLAYED through the streaming pipeline in
-    ``chunk``-column windows: dE/dt, online delay tracking, regrid and
+    chunk-column windows: dE/dt, online delay tracking, regrid and
     fusion statistics all run per window, so device memory never holds
-    a full trace.  phases: [(name, a, b)] absolute seconds.  ``grid``
-    (absolute) pins the output grid for batch-replay parity; otherwise
-    a default grid at half the fastest cadence is derived.  Returns one
-    ``[PhaseEnergy]`` per group.
+    a full trace.  phases: [(name, a, b)] absolute seconds.  Returns
+    one ``[PhaseEnergy]`` per group.
+
+    config: a ``fleet.config.PipelineConfig`` (or one of its sections,
+    auto-wrapped) holding the chunk/grid/dtype/engine knobs
+    (``StreamConfig``), the delay-tracking geometry (``TrackConfig``),
+    checkpointing (``CheckpointConfig``), plus ``health`` and ``dq``.
+    ``StreamConfig.grid`` (absolute) pins the output grid for
+    batch-replay parity; otherwise a default grid at half the fastest
+    cadence is derived.  The pre-config flat kwargs (``chunk=``,
+    ``window=``, ``checkpoint_dir=``, ...) still resolve — bit-
+    identically — through ``fleet.config.resolve_config`` but emit a
+    ``DeprecationWarning``.
 
     engine: ``"windowed"`` drives the per-window stage chain (the
     oracle, and the only multi-host path); ``"scan"`` plans the same
@@ -3090,16 +3087,33 @@ def attribute_energy_fused_streaming(trace_groups, phases, *,
     return_pipe: also return the driven pipeline (windowed engine), for
     health-event/metrics/metering inspection: ``(out, pipe)``.
 
-    Fault tolerance (windowed engine only): ``checkpoint_dir`` +
-    ``checkpoint_every=K`` writes an elastic carry checkpoint every K
-    replay windows; ``resume=True`` reloads the newest complete one and
+    Fault tolerance (windowed engine only): ``CheckpointConfig(dir=,
+    every=K)`` writes an elastic carry checkpoint every K replay
+    windows; ``resume=True`` reloads the newest complete one and
     SKIPS the already-processed windows — the resumed run's fused
     energies are bit-identical to the uninterrupted run (the carries
     are exact).  ``on_window(pipe, w)`` fires after window ``w``
-    (1-based) completes — test hook for kill injection.  ``dq_policy``:
-    a ``DataQualityPolicy`` for the ingest/fuse stages.
+    (1-based) completes — test hook for kill injection.
+    ``PipelineConfig.dq``: a ``DataQualityPolicy`` for the
+    ingest/fuse stages.
     """
     from repro.core.attribution import PhaseEnergy
+    cfg = resolve_config(config, legacy,
+                         "attribute_energy_fused_streaming")
+    chunk, engine = cfg.stream.chunk, cfg.stream.engine
+    grid, grid_step = cfg.stream.grid, cfg.stream.grid_step
+    dtype, var_floor = cfg.stream.dtype, cfg.stream.var_floor
+    use_t_measured = cfg.stream.use_t_measured
+    interpret, use_kernel = cfg.stream.interpret, cfg.stream.use_kernel
+    host = cfg.stream.host
+    track, delays = cfg.track.track, cfg.track.delays
+    window, hop = cfg.track.window, cfg.track.hop
+    max_lag, ema = cfg.track.max_lag, cfg.track.ema
+    tail = cfg.track.tail
+    checkpoint_dir = cfg.checkpoint.dir
+    checkpoint_every = cfg.checkpoint.every
+    resume = cfg.checkpoint.resume
+    health, dq_policy = cfg.health, cfg.dq
     groups = [list(g) for g in trace_groups]
     flat = [tr for g in groups for tr in g]
     rows = pack_stream_rows(flat, corrections=corrections,

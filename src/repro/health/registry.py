@@ -97,6 +97,23 @@ class HealthRegistry:
             return out
         self.register_source(f"serve:{name}", _fn)
 
+    def track_ingest(self, name: str, ingest) -> None:
+        """Expose a ``repro.ingest.PrioritizedIngest``'s per-backend
+        counters (reads, errors, fallbacks, cache hits, demotions,
+        recoveries) plus the total-read counter."""
+        def _fn(nm=name, ing=ingest):
+            out = [Metric("ingest_reads_total", float(ing.n_reads),
+                          kind="counter")]
+            keys = sorted({k for c in ing.counters.values() for k in c})
+            for key in keys:
+                out.append(Metric(
+                    f"ingest_{key}_total",
+                    {b: float(c.get(key, 0.0))
+                     for b, c in sorted(ing.counters.items())},
+                    kind="counter", label="backend"))
+            return out
+        self.register_source(f"ingest:{name}", _fn)
+
     def track_collectives(self, collectives) -> None:
         """Expose the framed-reduce wire stats (bytes posted vs dense)."""
         def _fn(co=collectives):

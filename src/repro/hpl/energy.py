@@ -18,6 +18,8 @@ from repro.core.measurement_model import CHIP_IDLE_W
 from repro.core.power_model import occupancy_power
 from repro.core.tracing import RegionTracer
 
+_UNSET = object()      # legacy-kwarg sentinel (see fleet.config)
+
 # phase -> roofline occupancy (compute, memory, collective)
 OCC = {
     "hpl_factorize": (1.0, 0.45, 0.1), "mxp_factorize": (1.0, 0.5, 0.1),
@@ -69,10 +71,10 @@ def fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4, seed0=0,
 
 
 def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
-                         seed0=0, sensors_per_chip=3, interpret=None,
-                         streaming=False, track=None, chunk=1024,
-                         shard=None, collectives=None,
-                         engine="windowed"):
+                         seed0=0, sensors_per_chip=3, config=None,
+                         interpret=_UNSET, streaming=False,
+                         track=_UNSET, chunk=_UNSET, shard=None,
+                         collectives=None, engine=_UNSET):
     """Per-node phase energies from FUSED cross-sensor streams.
 
     Where ``fleet_energize`` trusts chip0's energy counter alone, this
@@ -84,7 +86,11 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
     applied to the MxP accounting.  Returns one [PhaseEnergy] per node.
 
     ``streaming=True`` runs the same accounting through the streaming
-    stage pipeline (``fleet.pipeline``) in ``chunk``-sized windows:
+    stage pipeline (``fleet.pipeline``); ``config`` (a
+    ``fleet.config.PipelineConfig`` or section) carries its knobs —
+    the flat ``chunk``/``track``/``engine``/``interpret`` kwargs still
+    resolve bit-identically on that path but are deprecated.  The
+    replay runs in chunk-sized windows:
     O(fleet x chunk) memory and online per-sensor delay tracking — the
     long-HPL-run mode where sensor clocks drift.  ``engine="scan"``
     executes that replay as one jitted ``lax.scan``
@@ -104,6 +110,11 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
     are passed).
     """
     from repro.core.calibration import nic_rail_corrections
+    from repro.fleet.config import resolve_config
+    legacy = {k: v for k, v in dict(track=track, chunk=chunk,
+                                    engine=engine,
+                                    interpret=interpret).items()
+              if v is not _UNSET}
     shifted, truth = phases_and_truth(tracer)
     # default 3: on-chip counter + on-chip power + off-chip PM — one
     # stream per scope (the two pm_accel0 views of the same tray PM
@@ -130,17 +141,21 @@ def fused_fleet_energize(tracer: RegionTracer, n_nodes, *, n_chips=4,
         return attribute_energy_fused_multihost(
             groups, shifted, shard=shard, collectives=collectives,
             reference=truth, corrections=nic_rail_corrections(),
-            track=track, chunk=chunk, interpret=interpret)
+            config=resolve_config(config, legacy,
+                                  "fused_fleet_energize"))
     if streaming:
         from repro.fleet.pipeline import attribute_energy_fused_streaming
         return attribute_energy_fused_streaming(
             groups, shifted, reference=truth,
-            corrections=nic_rail_corrections(), track=track,
-            chunk=chunk, interpret=interpret, engine=engine)
+            corrections=nic_rail_corrections(),
+            config=resolve_config(config, legacy,
+                                  "fused_fleet_energize"))
+    assert config is None, \
+        "config= drives the streaming pipeline — pass streaming=True"
     from repro.align import attribute_energy_fused
     return attribute_energy_fused(groups, shifted, reference=truth,
                                   corrections=nic_rail_corrections(),
-                                  interpret=interpret)
+                                  interpret=legacy.get("interpret"))
 
 
 def mxp_energy_report(full_tracer: RegionTracer, mxp_tracer: RegionTracer,

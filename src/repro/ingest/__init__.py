@@ -1,0 +1,32 @@
+"""Real-sensor ingest: backends, priority fallback, async pump.
+
+The backend protocol (:class:`SensorBackend`) wraps each counter
+source — rocm-smi / amd-smi subprocesses, RAPL ``/sys/class/powercap``
+zones, hwmon channels, or the sensor-fabric simulator — behind
+capability discovery and declared counter semantics (wrap range,
+resolution).  :class:`PrioritizedIngest` stacks them with graceful
+degradation; :class:`AsyncFleetIngest` pumps readers into the
+streaming pipeline; :func:`attribute_live` is the end-to-end wire-up.
+"""
+from repro.ingest.async_ingest import (AsyncFleetIngest,
+                                       SimulatedSMIReader)
+from repro.ingest.backend import (BackendError, MetricSpec, Reading,
+                                  SensorBackend)
+from repro.ingest.hwmon import HwmonBackend
+from repro.ingest.live import LiveResult, attribute_live, \
+    discover_backends
+from repro.ingest.priority import (BackendReader, IngestPolicy,
+                                   IngestUnavailable, PrioritizedIngest,
+                                   default_backend_order)
+from repro.ingest.rapl import RaplBackend
+from repro.ingest.rocm import AmdSmiBackend, RocmSmiBackend
+from repro.ingest.sim import SimBackend
+
+__all__ = [
+    "AmdSmiBackend", "AsyncFleetIngest", "BackendError",
+    "BackendReader", "HwmonBackend", "IngestPolicy",
+    "IngestUnavailable", "LiveResult", "MetricSpec",
+    "PrioritizedIngest", "RaplBackend", "Reading", "RocmSmiBackend",
+    "SensorBackend", "SimBackend", "SimulatedSMIReader",
+    "attribute_live", "default_backend_order", "discover_backends",
+]

@@ -93,16 +93,24 @@ def _scatter_slot(big, small, slot):
             bg, sm.astype(bg.dtype), slot, axis=1), big, small)
 
 
+_UNSET = object()      # legacy-kwarg sentinel (see fleet.config)
+
+
+def _explicit(**kw) -> dict:
+    """The kwargs the caller actually passed (sentinel-filtered)."""
+    return {k: v for k, v in kw.items() if v is not _UNSET}
+
+
 class _AttributionMixin:
     """Shared phase-level energy attribution (both engines record the
     same depth-0 admission/prefill/decode phases)."""
 
     def attribute_phases(self, traces, *, corrections=None, depth=0,
-                         t_shift=0.0, use_fleet=True, chunk=1024,
-                         fuse=False, reference=None, streaming=False,
-                         track=None, delays=None, shard=None,
-                         collectives=None, engine="windowed",
-                         health=None, registry=None):
+                         t_shift=0.0, use_fleet=True, config=None,
+                         chunk=_UNSET, fuse=False, reference=None,
+                         streaming=False, track=_UNSET, delays=_UNSET,
+                         shard=None, collectives=None, engine=_UNSET,
+                         health=_UNSET, registry=None):
         """Per-phase energy for the engine's recorded serving phases.
 
         traces: {name: SensorTrace} (e.g. ``NodeFabric.sample_all``) or a
@@ -120,11 +128,16 @@ class _AttributionMixin:
         optionally passes the known phase schedule (PiecewisePower) for
         delay estimation; default is each device's first counter.
         ``streaming=True`` runs the fused attribution through the
-        streaming stage pipeline (``fleet.pipeline``) in ``chunk``-sized
+        streaming stage pipeline (``fleet.pipeline``) in chunk-sized
         windows — per-sensor delays tracked online on sliding windows,
         O(fleet x chunk) memory — instead of the batch align-and-fuse.
-        ``track``/``delays`` pin the tracking mode: fixed per-sensor
-        ``delays`` (track=False) or online tracking seeded by them.
+        ``config`` (a ``fleet.config.PipelineConfig`` or section)
+        carries the streaming pipeline's knobs; the flat
+        ``chunk``/``track``/``delays``/``engine``/``health`` kwargs
+        still resolve bit-identically but are deprecated on the
+        streaming paths.  ``track``/``delays`` pin the tracking mode:
+        fixed per-sensor ``delays`` (track=False) or online tracking
+        seeded by them.
         ``shard``+``collectives`` (streaming only) extend that pipeline
         across ``jax.distributed`` processes: THIS engine's traces are
         the local device groups described by the HostShard, and the
@@ -145,43 +158,52 @@ class _AttributionMixin:
         reg = registry if registry is not None else self.registry
         phases = [(n, a + t_shift, b + t_shift)
                   for n, a, b in self.tracer.phases(depth=depth)]
+        legacy = _explicit(chunk=chunk, track=track, delays=delays,
+                           engine=engine, health=health)
         if fuse:
             assert isinstance(traces, dict), \
                 "fuse=True groups by sensor name and needs dict input"
             from repro.align import (attribute_energy_fused,
                                      group_traces_by_device)
+            from repro.fleet.config import resolve_config
             groups = group_traces_by_device(traces)
             if collectives is not None:
                 assert streaming, \
                     "multi-host attribution runs the streaming pipeline"
                 from repro.distributed.multihost import (
                     attribute_energy_fused_multihost)
+                cfg = resolve_config(config, legacy,
+                                     "attribute_phases")
                 all_rows = attribute_energy_fused_multihost(
                     list(groups.values()), phases, shard=shard,
                     collectives=collectives, corrections=corrections,
-                    reference=reference, track=track, delays=delays,
-                    chunk=chunk, health=health, registry=reg)
+                    reference=reference, config=cfg, registry=reg)
                 rows = [all_rows[g] for g in shard.group_ids]
             elif streaming:
                 from repro.fleet.pipeline import (
                     attribute_energy_fused_streaming)
+                cfg = resolve_config(config, legacy,
+                                     "attribute_phases")
                 rows = attribute_energy_fused_streaming(
                     list(groups.values()), phases,
                     corrections=corrections, reference=reference,
-                    track=track, delays=delays, chunk=chunk,
-                    engine=engine, health=health, registry=reg)
+                    config=cfg, registry=reg)
             else:
-                rows = attribute_energy_fused(list(groups.values()),
-                                              phases,
-                                              corrections=corrections,
-                                              reference=reference,
-                                              delays=delays)
+                assert config is None, \
+                    "config= drives the streaming pipeline — pass " \
+                    "streaming=True"
+                rows = attribute_energy_fused(
+                    list(groups.values()), phases,
+                    corrections=corrections, reference=reference,
+                    delays=legacy.get("delays"))
             return dict(zip(groups.keys(), rows))
         from repro.core.attribution import attribute_energy_many
         as_dict = isinstance(traces, dict)
         trs = list(traces.values()) if as_dict else list(traces)
-        rows = attribute_energy_many(trs, phases, corrections=corrections,
-                                     use_fleet=use_fleet, chunk=chunk)
+        rows = attribute_energy_many(trs, phases,
+                                     corrections=corrections,
+                                     use_fleet=use_fleet,
+                                     chunk=legacy.get("chunk", 1024))
         if as_dict:
             return dict(zip(traces.keys(), rows))
         return rows
@@ -392,8 +414,9 @@ class ServeEngine(_AttributionMixin):
     # -- per-request energy ----------------------------------------------
 
     def attribute_requests(self, traces, *, corrections=None,
-                           t_shift=0.0, chunk=1024, reference=None,
-                           track=None, delays=None, health=None,
+                           t_shift=0.0, config=None, chunk=_UNSET,
+                           reference=None, track=_UNSET,
+                           delays=_UNSET, health=_UNSET,
                            registry=None) -> RequestEnergyReport:
         """Split fused phase energy across requests -> energy bills.
 
@@ -415,12 +438,16 @@ class ServeEngine(_AttributionMixin):
                   for n, a, b in self.tracer.phases(depth=0)]
         segs = [s.shifted(t_shift) for s in self.segments]
         from repro.align import group_traces_by_device
+        from repro.fleet.config import resolve_config
         from repro.fleet.pipeline import attribute_energy_fused_streaming
+        cfg = resolve_config(config,
+                             _explicit(chunk=chunk, track=track,
+                                       delays=delays, health=health),
+                             "attribute_requests")
         groups = group_traces_by_device(traces)
         _, pipe = attribute_energy_fused_streaming(
             list(groups.values()), phases, corrections=corrections,
-            reference=reference, track=track, delays=delays,
-            chunk=chunk, health=health, registry=reg, meter=segs,
+            reference=reference, config=cfg, registry=reg, meter=segs,
             return_pipe=True)
         energies = pipe.request_energies()
         entries = []

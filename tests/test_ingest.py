@@ -1,0 +1,621 @@
+"""Real-sensor ingest: backend protocol conformance, tool-output
+parsing (declared wrap/resolution semantics), prioritized fallback with
+error budgets and last-good caching, the async pump's ingest-boundary
+dedupe, and the live capture path surviving a mid-run backend kill."""
+import dataclasses
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ToolSpec, simulate_sensor, square_wave
+from repro.core.measurement_model import SensorSpec
+from repro.core.reconstruction import unwrap_counter
+from repro.core.sensors import SensorTrace
+from repro.health.events import HEALTHY, QUARANTINED
+from repro.health.registry import HealthRegistry
+from repro.ingest import (AsyncFleetIngest, BackendError, BackendReader,
+                          HwmonBackend, IngestPolicy, IngestUnavailable,
+                          MetricSpec, PrioritizedIngest, RaplBackend,
+                          Reading, RocmSmiBackend, SensorBackend,
+                          SimBackend, SimulatedSMIReader, attribute_live,
+                          default_backend_order)
+from repro.ingest.rocm import (ACCUMULATOR_BITS, DEFAULT_RESOLUTION_UJ,
+                               AmdSmiBackend)
+
+
+# ------------------------------------------------ fixtures: fake tools
+
+ROCM_ENERGY = {
+    "card0": {"Energy counter": "1000000",
+              "Accumulated Energy (uJ)": "15259000.0"},
+    "card1": {"Energy counter": "2000000",
+              "Accumulated Energy (uJ)": "30518000.0"},
+}
+ROCM_POWER = {
+    "card0": {"Average Graphics Package Power (W)": "97.0"},
+    "card1": {"Current Socket Graphics Package Power (W)": "105.5"},
+}
+AMD_ENERGY = [
+    {"gpu": 0, "energy": {
+        "total_energy_consumption": {"value": 123.5, "unit": "J"},
+        "energy_accumulator": 8093946901,
+        "counter_resolution": {"value": 15.259, "unit": "uJ"}}},
+]
+AMD_POWER = [
+    {"gpu": 0, "power": {
+        "socket_power": {"value": 150.0, "unit": "W"}}},
+]
+
+
+def _rocm_runner(energy=ROCM_ENERGY, power=ROCM_POWER):
+    def run(argv, timeout_s):
+        if "--showenergycounter" in argv:
+            return json.dumps(energy)
+        if "--showpower" in argv:
+            return json.dumps(power)
+        raise BackendError(f"fake rocm-smi: unknown args {argv[1:]}")
+    return run
+
+
+def _amd_runner(energy=AMD_ENERGY, power=AMD_POWER):
+    def run(argv, timeout_s):
+        if "--energy" in argv:
+            return json.dumps(energy)
+        if "--power" in argv:
+            return json.dumps(power)
+        raise BackendError(f"fake amd-smi: unknown args {argv[1:]}")
+    return run
+
+
+def _rapl_tree(tmp_path):
+    root = tmp_path / "powercap"
+    zones = {
+        "intel-rapl:0": ("package-0", "262143328850", "900000"),
+        "intel-rapl:0:0": ("core", "262143328850", "400000"),
+        "intel-rapl:1": ("package-1", "262143328850", "800000"),
+        "psys-0": ("psys", "1000000", "123456"),
+    }
+    for zone, (name, max_uj, uj) in zones.items():
+        d = root / zone
+        d.mkdir(parents=True)
+        (d / "name").write_text(name + "\n")
+        (d / "max_energy_range_uj").write_text(max_uj + "\n")
+        (d / "energy_uj").write_text(uj + "\n")
+    # a zone with a corrupt declared range must be skipped, not fatal
+    bad = root / "intel-rapl:2"
+    bad.mkdir()
+    (bad / "name").write_text("package-2\n")
+    (bad / "max_energy_range_uj").write_text("garbage\n")
+    (bad / "energy_uj").write_text("1\n")
+    return root
+
+
+def _hwmon_tree(tmp_path):
+    root = tmp_path / "hwmon"
+    gpu = root / "hwmon0"
+    gpu.mkdir(parents=True)
+    (gpu / "name").write_text("amdgpu\n")
+    (gpu / "power1_input").write_text("25000000\n")      # 25 W
+    cpu = root / "hwmon1"
+    cpu.mkdir()
+    (cpu / "name").write_text("amd_energy\n")
+    (cpu / "energy1_input").write_text("123000000\n")    # 123 J
+    return root
+
+
+def _counter_trace(name, p_w=20.0, span=2.0, dt=0.005, wrap_range=0.0):
+    """Constant-power cumulative counter, optionally wrapping at the
+    DECLARED ``wrap_range`` joules."""
+    t = np.arange(0.0, span + dt / 2, dt)
+    v = p_w * t
+    if wrap_range:
+        v = np.mod(v, wrap_range)
+    spec = SensorSpec(name=name, scope="chip", kind="energy_cum",
+                      quantum=1e-6, wrap_range_j=wrap_range)
+    return SensorTrace(name, spec, t, t.copy(), v)
+
+
+def _make_backend(kind, tmp_path):
+    if kind == "rocm":
+        return RocmSmiBackend(tool_path="/fake/rocm-smi",
+                              runner=_rocm_runner())
+    if kind == "amd":
+        return AmdSmiBackend(tool_path="/fake/amd-smi",
+                             runner=_amd_runner())
+    if kind == "rapl":
+        return RaplBackend(root=_rapl_tree(tmp_path))
+    if kind == "hwmon":
+        return HwmonBackend(root=_hwmon_tree(tmp_path))
+    if kind == "sim":
+        power = SensorTrace(
+            "gpu0.power",
+            SensorSpec(name="gpu0.power", scope="chip",
+                       kind="power_inst"),
+            np.asarray([0.0, 0.1]), np.asarray([0.0, 0.1]),
+            np.asarray([50.0, 55.0]))
+        return SimBackend({"gpu0.energy": _counter_trace("gpu0.energy",
+                                                         wrap_range=64.0),
+                           "gpu0.power": power}, speed=1e6)
+    raise AssertionError(kind)
+
+
+# ------------------------------------------------ protocol conformance
+
+@pytest.fixture(params=["rocm", "amd", "rapl", "hwmon", "sim"])
+def backend(request, tmp_path):
+    return _make_backend(request.param, tmp_path)
+
+
+def test_backend_conformance(backend):
+    """Every adapter honours the SensorBackend protocol: non-empty
+    cached discovery, per-metric specs with declared counter semantics,
+    SI readings, and BackendError (not crashes) on unknown metrics."""
+    specs = backend.discover()
+    assert specs, backend.name
+    assert backend.available()
+    assert backend.discover() == specs          # discovery is cached
+    assert backend.rediscover() == specs
+    for sp in specs:
+        assert isinstance(sp, MetricSpec)
+        assert sp.kind in ("energy_cum", "power_inst")
+        assert sp.source == backend.name
+        assert backend.spec(sp.metric) == sp
+        if sp.is_cumulative:
+            # the ingest-backend invariant: wrap ranges are DECLARED
+            assert sp.wrap_range_j > 0.0, sp.metric
+            assert sp.sensor_spec().wrap_period_j \
+                == pytest.approx(sp.wrap_range_j)
+        r = backend.read(sp.metric)
+        assert isinstance(r, Reading)
+        assert r.metric == sp.metric
+        assert r.source == backend.name
+        assert np.isfinite(r.value)
+        assert r.t_measured <= r.t_read or r.t_measured == r.t_read
+    with pytest.raises(BackendError):
+        backend.read("nonexistent.metric")
+    with pytest.raises(BackendError):
+        backend.spec("nonexistent.metric")
+    backend.close()
+
+
+# ------------------------------------------------ SMI output parsing
+
+def test_rocm_smi_resolution_recovered_from_counter_ratio():
+    b = RocmSmiBackend(tool_path="/fake", runner=_rocm_runner())
+    sp = b.spec("gpu0.energy")
+    # 15259000 uJ over 1e6 ticks -> 15.259 uJ/tick, declared in joules
+    assert sp.resolution_j == pytest.approx(15.259e-6)
+    assert sp.wrap_range_j == pytest.approx(
+        (2.0 ** ACCUMULATOR_BITS) * 15.259e-6)
+    r = b.read("gpu0.energy")
+    assert r.value == pytest.approx(15.259)       # uJ -> J
+    assert b.read("gpu0.power").value == pytest.approx(97.0)
+    assert b.read("gpu1.power").value == pytest.approx(105.5)
+    assert {sp.metric for sp in b.discover()} == {
+        "gpu0.energy", "gpu1.energy", "gpu0.power", "gpu1.power"}
+
+
+def test_rocm_smi_default_resolution_without_ticks():
+    doc = {"card0": {"Accumulated Energy (uJ)": "100.0"}}
+    b = RocmSmiBackend(tool_path="/fake", runner=_rocm_runner(doc, {}))
+    sp = b.spec("gpu0.energy")
+    assert sp.resolution_j == pytest.approx(DEFAULT_RESOLUTION_UJ * 1e-6)
+
+
+def test_amd_smi_declares_counter_resolution_verbatim():
+    b = AmdSmiBackend(tool_path="/fake", runner=_amd_runner())
+    sp = b.spec("gpu0.energy")
+    assert sp.resolution_j == pytest.approx(15.259e-6)
+    assert sp.wrap_range_j == pytest.approx(
+        (2.0 ** ACCUMULATOR_BITS) * 15.259e-6)
+    assert b.read("gpu0.energy").value == pytest.approx(123.5)
+    assert b.read("gpu0.power").value == pytest.approx(150.0)
+
+
+def test_amd_smi_resolution_from_accumulator_ratio():
+    doc = [{"gpu": 0, "energy": {
+        "total_energy_consumption": {"value": 100.0, "unit": "J"},
+        "energy_accumulator": 50}}]
+    b = AmdSmiBackend(tool_path="/fake", runner=_amd_runner(doc, []))
+    assert b.spec("gpu0.energy").resolution_j == pytest.approx(2.0)
+
+
+def test_smi_accumulator_wrap_unwraps_with_declared_period():
+    """A 64-bit accumulator wrap unwraps exactly with the DECLARED
+    period — the downstream unwrap never has to guess the range."""
+    b = RocmSmiBackend(tool_path="/fake", runner=_rocm_runner())
+    period = b.spec("gpu0.energy").sensor_spec().wrap_period_j
+    vals = np.asarray([period - 1.0, 1.0])        # wrapped across zero
+    un = unwrap_counter(vals, period=period)
+    assert un[1] - un[0] == pytest.approx(2.0)
+
+
+def test_smi_disabled_via_env(monkeypatch):
+    monkeypatch.setenv("REPRO_INGEST_DISABLE", "rocm-smi")
+    b = RocmSmiBackend(tool_path="/fake", runner=_rocm_runner())
+    assert not b.available()
+
+
+# ------------------------------------------------ RAPL / hwmon sysfs
+
+def test_rapl_zone_naming_and_declared_wrap(tmp_path):
+    b = RaplBackend(root=_rapl_tree(tmp_path))
+    metrics = {sp.metric: sp for sp in b.discover()}
+    assert set(metrics) == {"cpu0.energy", "cpu0.core.energy",
+                            "cpu1.energy", "psys.energy"}
+    sp = metrics["cpu0.energy"]
+    assert sp.wrap_range_j == pytest.approx(262143.32885)
+    assert sp.resolution_j == pytest.approx(1e-6)
+    assert b.read("cpu0.energy").value == pytest.approx(0.9)
+    # corrupt package-2 zone was skipped, not fatal
+    assert "cpu2.energy" not in metrics
+
+
+def test_rapl_wraps_at_declared_max_energy_range(tmp_path):
+    root = _rapl_tree(tmp_path)
+    b = RaplBackend(root=root)
+    sp = b.spec("psys.energy")
+    assert sp.wrap_range_j == pytest.approx(1.0)  # 1e6 uJ
+    v0 = b.read("psys.energy").value
+    (root / "psys-0" / "energy_uj").write_text("900000\n")
+    v1 = b.read("psys.energy").value
+    (root / "psys-0" / "energy_uj").write_text("100000\n")  # wrapped
+    v2 = b.read("psys.energy").value
+    un = unwrap_counter(np.asarray([v0, v1, v2]),
+                        period=sp.sensor_spec().wrap_period_j)
+    assert un[2] - un[1] == pytest.approx(0.2)    # +200 mJ, not -800
+    assert np.all(np.diff(un) > 0)
+
+
+def test_hwmon_channels_scales_and_gpu_mapping(tmp_path):
+    b = HwmonBackend(root=_hwmon_tree(tmp_path))
+    metrics = {sp.metric: sp for sp in b.discover()}
+    assert set(metrics) == {"gpu0.power", "amd_energy1.energy"}
+    assert metrics["gpu0.power"].kind == "power_inst"
+    assert b.read("gpu0.power").value == pytest.approx(25.0)
+    sp = metrics["amd_energy1.energy"]
+    assert sp.wrap_range_j == pytest.approx((2.0 ** 64) * 1e-6)
+    assert b.read("amd_energy1.energy").value == pytest.approx(123.0)
+
+
+def test_backends_unavailable_on_missing_roots(tmp_path):
+    assert not RaplBackend(root=tmp_path / "nope").available()
+    assert not HwmonBackend(root=tmp_path / "nope").available()
+
+
+# ------------------------------------------------ prioritized ingest
+
+class _Clock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def tick(self, dt):
+        self.t += dt
+        return self.t
+
+
+class _FakeBackend(SensorBackend):
+    """Scriptable backend: togglable failure, counting reads."""
+
+    def __init__(self, name, metrics=("m",), clock=None, fail=False):
+        super().__init__(clock=clock or _Clock())
+        self.name = name
+        self._metrics = list(metrics)
+        self.fail = fail
+        self.reads = 0
+        self._v = 0.0
+
+    def _discover(self):
+        return [MetricSpec(m, "energy_cum", wrap_range_j=1e3,
+                           resolution_j=1e-6, source=self.name)
+                for m in self._metrics]
+
+    def read(self, metric):
+        self.reads += 1
+        if self.fail:
+            raise BackendError(f"{self.name} is down")
+        if metric not in self._metrics:
+            raise BackendError(f"unknown {metric!r}")
+        self._v += 1.0
+        t = self._clock()
+        return Reading(metric, t, t, self._v, self.name)
+
+
+def test_priority_fallback_to_next_provider():
+    clk = _Clock()
+    a = _FakeBackend("a", clock=clk, fail=True)
+    b = _FakeBackend("b", clock=clk)
+    ing = PrioritizedIngest([a, b], clock=clk)
+    r = ing.read("m")
+    assert r.source == "b" and not r.cached
+    assert ing.counters["a"]["errors"] == 1
+    assert ing.counters["b"]["fallbacks"] == 1
+    assert ing.counters["b"]["reads"] == 1
+
+
+def test_priority_demotion_retry_and_recovery():
+    clk = _Clock()
+    a = _FakeBackend("a", clock=clk, fail=True)
+    b = _FakeBackend("b", clock=clk)
+    pol = IngestPolicy(error_budget=2, retry_after_s=5.0)
+    ing = PrioritizedIngest([a, b], policy=pol, clock=clk)
+    ing.read("m")
+    ing.read("m")                       # second failure -> demotion
+    assert ing.counters["a"]["demotions"] == 1
+    assert a.reads == 2
+    ing.read("m")                       # demoted: a is not even tried
+    assert a.reads == 2
+    [ev] = [e for e in ing.events if e.state_to == QUARANTINED]
+    assert ev.kind == "ingest" and ev.name == "a:m"
+    clk.tick(6.0)                       # past retry_after_s
+    a.fail = False
+    r = ing.read("m")
+    assert r.source == "a" and a.reads == 3
+    assert ing.counters["a"]["recoveries"] == 1
+    [rev] = [e for e in ing.events if e.state_to == HEALTHY]
+    assert rev.name == "a:m" and "recovered" in rev.flags
+
+
+def test_cache_serves_last_good_until_stale():
+    clk = _Clock()
+    a = _FakeBackend("a", clock=clk)
+    pol = IngestPolicy(stale_ttl_s=0.25, error_budget=99)
+    ing = PrioritizedIngest([a], policy=pol, clock=clk)
+    good = ing.read("m")
+    a.fail = True
+    clk.tick(0.1)                       # inside the TTL: cached serve
+    r = ing.read("m")
+    assert r.cached and r.value == good.value
+    assert ing.counters["a"]["cache_hits"] == 1
+    clk.tick(1.0)                       # cache now stale
+    with pytest.raises(IngestUnavailable):
+        ing.read("m")
+
+
+def test_per_metric_priority_override_and_spec():
+    clk = _Clock()
+    a = _FakeBackend("a", clock=clk)
+    b = _FakeBackend("b", clock=clk)
+    ing = PrioritizedIngest([a, b], priority={"m": ["b", "a"]},
+                            clock=clk)
+    assert [bk.name for bk in ing.providers("m")] == ["b", "a"]
+    assert ing.spec("m").source == "b"
+    r = ing.read("m")
+    assert r.source == "b"
+    assert ing.counters["b"]["fallbacks"] == 0    # b is rank 0 here
+    with pytest.raises(IngestUnavailable):
+        ing.spec("nope")
+
+
+def test_ingest_counters_export_through_registry():
+    clk = _Clock()
+    reg = HealthRegistry()
+    ing = PrioritizedIngest([_FakeBackend("a", clock=clk)],
+                            clock=clk, registry=reg)
+    ing.read("m")
+    text = reg.prometheus_text()
+    assert "ingest_reads_total" in text
+    assert 'backend="a"' in text
+
+
+def test_events_sink_receives_transitions():
+    clk = _Clock()
+    sink = []
+    a = _FakeBackend("a", clock=clk, fail=True)
+    b = _FakeBackend("b", clock=clk)
+    ing = PrioritizedIngest([a, b], clock=clk, events=sink,
+                            policy=IngestPolicy(error_budget=1))
+    ing.read("m")
+    assert len(sink) == 1 and sink[0].state_to == QUARANTINED
+
+
+def test_default_backend_order_env(monkeypatch):
+    monkeypatch.delenv("REPRO_INGEST_PRIORITY", raising=False)
+    assert default_backend_order() == ["rocm-smi", "amd-smi", "rapl",
+                                       "hwmon", "sim"]
+    monkeypatch.setenv("REPRO_INGEST_PRIORITY", "rapl , sim")
+    assert default_backend_order() == ["rapl", "sim"]
+
+
+# ------------------------------------------------ reader + async pump
+
+def test_backend_reader_dedupes_stale_publications():
+    clk = _Clock()
+    a = _FakeBackend("a", clock=clk)
+    ing = PrioritizedIngest([a], clock=clk)
+    rd = BackendReader(ing, "m")
+    t, v = rd.poll(clk())
+    assert len(t) == 1
+    # frozen clock -> same t_measured -> deduped at the boundary
+    t, v = rd.poll(clk())
+    assert len(t) == 0 and rd.n_dupes == 1
+    clk.tick(0.5)
+    t, v = rd.poll(clk())
+    assert len(t) == 1
+    a.fail = True
+    clk.tick(10.0)                      # cache stale too
+    t, v = rd.poll(clk())
+    assert len(t) == 0 and rd.n_unavailable == 1
+    assert not rd.drained
+    rd.stop()
+    assert rd.drained
+
+
+def test_backend_reader_t_stop_bound():
+    clk = _Clock()
+    a = _FakeBackend("a", clock=clk)
+    ing = PrioritizedIngest([a], clock=clk)
+    rd = BackendReader(ing, "m", t_stop=clk.t)
+    rd.poll(clk())                      # t_measured == t_stop
+    assert rd.drained
+
+
+class _ListReader:
+    """Replays scripted (t, v) poll batches."""
+
+    def __init__(self, batches):
+        self._batches = [(np.asarray(t, np.float64),
+                          np.asarray(v, np.float64))
+                         for t, v in batches]
+
+    def poll(self, now_wall):
+        if self._batches:
+            return self._batches.pop(0)
+        return np.empty((0,)), np.empty((0,))
+
+    @property
+    def drained(self):
+        return not self._batches
+
+
+class _CapStream:
+    def __init__(self):
+        self.calls = []
+
+    def update(self, t, e):
+        self.calls.append((np.array(t), np.array(e)))
+
+
+def test_async_ingest_dedupes_duplicate_timestamps():
+    """Coarse sensor clocks re-deliver publications; only strictly
+    advancing timestamps reach the stream, reorders pass through."""
+    rd = _ListReader([
+        ([1.0, 1.0, 2.0, 2.0, 3.0], [10.0, 10.0, 20.0, 20.0, 30.0]),
+        ([3.0, 4.0], [30.0, 40.0]),     # cross-poll re-delivery
+        ([5.0, 4.5], [50.0, 45.0]),     # genuine reorder: kept
+    ])
+    cap = _CapStream()
+    pump = AsyncFleetIngest([rd], cap, t0=0.0, chunk=8)
+    for _ in range(3):
+        pump._poll_once()
+    assert pump.n_dupes == 3            # two in-batch + one cross-poll
+    assert pump._buf[0][0] == [1.0, 2.0, 3.0, 4.0, 5.0, 4.5]
+    pump._flush()
+    (t_blk, e_blk), = cap.calls
+    # replicate-last padding up to the chunk width
+    np.testing.assert_allclose(
+        t_blk[0], [1.0, 2.0, 3.0, 4.0, 5.0, 4.5, 4.5, 4.5])
+    np.testing.assert_allclose(e_blk[0][-3:], [45.0, 45.0, 45.0])
+    assert pump.bounds[0] == (1.0, 10.0, 4.5, 45.0)
+
+
+def test_async_ingest_jitter_dephases_poll_clock():
+    with pytest.raises(AssertionError):
+        AsyncFleetIngest([], _CapStream(), t0=0.0, jitter=1.5)
+    rng = np.random.default_rng(0)
+    waits = 1e-3 * (1.0 + 0.25 * rng.uniform(-1.0, 1.0, 100))
+    assert np.std(waits) > 0.0          # the de-phasing is real
+    assert np.all(waits > 0.0)
+
+
+def test_simulated_smi_reader_shutdown_conservation():
+    """Satellite regression: the promoted SimulatedSMIReader +
+    AsyncFleetIngest pump conserves counter energy through stop() —
+    stream totals equal the unwrapped first->last counter delta."""
+    from repro.fleet import FleetStream
+    truth = square_wave(1.0, 2, lead_s=0.5, tail_s=0.5)
+    spec = SensorSpec(name="e0", scope="chip", kind="energy_cum",
+                      quantum=1e-6, wrap_bits=26)
+    tool = ToolSpec(0.9e-3)
+    tr = simulate_sensor(spec, tool, truth, seed=0)
+    reader = SimulatedSMIReader(tr, speed=64.0)
+    t0 = float(tr.t_measured[0])
+    span = float(tr.t_measured[-1]) - t0
+    stream = FleetStream([(0.0, span + 1.0)], 1,
+                         wrap_period=[tr.spec.wrap_period_j])
+    pump = AsyncFleetIngest([reader], stream, t0, chunk=64,
+                            interval_s=1e-3).start()
+    deadline = time.perf_counter() + 30.0
+    while not reader.drained and time.perf_counter() < deadline:
+        time.sleep(1e-3)
+    pump.stop()
+    assert reader.drained
+    assert pump.n_chunks >= 2
+    assert pump.n_dupes > 0             # the busy-poll re-delivery bug
+    # expected counter delta over the whole replay (the boundary pair
+    # alone cannot see multiple wraps; the full series can)
+    un = unwrap_counter(tr.value, period=tr.spec.wrap_period_j)
+    expect = float(un[-1] - un[0])
+    tf, ef, tl, el = pump.bounds[0]
+    assert ef == pytest.approx(float(tr.value[0]))
+    got = float(np.asarray(stream.totals())[0].sum())
+    assert abs(got - expect) <= max(1e-3 * abs(expect), 1e-3), \
+        (got, expect)
+
+
+# ------------------------------------------------ live e2e: mid-run kill
+
+class _Killable(SensorBackend):
+    """Proxy over a SimBackend that dies after ``n_ok`` reads."""
+
+    name = "sim-primary"
+
+    def __init__(self, inner, n_ok):
+        super().__init__(clock=inner._clock)
+        self._inner = inner
+        self._n_ok = n_ok
+        self.reads = 0
+
+    def _discover(self):
+        return [dataclasses.replace(sp, source=self.name)
+                for sp in self._inner.discover()]
+
+    def read(self, metric):
+        self.reads += 1
+        if self.reads > self._n_ok:
+            raise BackendError("killed mid-run")
+        return dataclasses.replace(self._inner.read(metric),
+                                   source=self.name)
+
+
+class _ChainedSim(SimBackend):
+    """SimBackend sharing a leader's replay origin, so a fallback
+    read continues exactly where the dead backend stopped."""
+
+    name = "sim-backup"
+
+    def __init__(self, traces, leader, **kw):
+        super().__init__(traces, **kw)
+        self._leader = leader
+
+    def _t_sim(self):
+        if self._leader._t0_wall is not None:
+            self._t0_wall = self._leader._t0_wall
+        return super()._t_sim()
+
+
+def test_live_backend_kill_falls_back_without_dropping_windows():
+    """Acceptance: killing the preferred backend mid-run falls down
+    the priority list without an unavailable poll or a lost window —
+    phase energies still match the constant-power ground truth."""
+    p_w, span = 20.0, 2.0
+    tr = _counter_trace("gpu0.energy", p_w=p_w, span=span, dt=0.005,
+                        wrap_range=15.0)       # wraps ~2x mid-capture
+    inner = SimBackend({"gpu0.energy": tr}, speed=8.0)
+    primary = _Killable(inner, n_ok=25)
+    backup = _ChainedSim({"gpu0.energy": tr}, leader=inner, speed=8.0)
+    ingest = PrioritizedIngest(
+        [primary, backup],
+        policy=IngestPolicy(error_budget=1, retry_after_s=60.0,
+                            stale_ttl_s=0.05))
+    res = attribute_live([("first", 0.0, 1.0), ("second", 1.0, 2.0)],
+                         duration_s=0.6, ingest=ingest,
+                         metrics=["gpu0.energy"], chunk=16,
+                         interval_s=2e-3, window=128, hop=64,
+                         max_lag=8, tail=64)
+    # the kill happened, was demoted once, and the backup took over
+    assert primary.reads > 25
+    assert ingest.counters["sim-primary"]["demotions"] == 1
+    assert ingest.counters["sim-backup"]["fallbacks"] > 0
+    assert any(e.state_to == QUARANTINED for e in ingest.events)
+    # no dropped windows: every poll produced data or a clean dedupe
+    assert sum(r.n_unavailable for r in res.readers) == 0
+    assert res.pump.n_chunks >= 3
+    e = res.energies()
+    assert abs(e["first"]["gpu0"] - p_w * 1.0) <= 1.0, e
+    assert abs(e["second"]["gpu0"] - p_w * 1.0) <= 1.0, e

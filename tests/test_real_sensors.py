@@ -1,0 +1,75 @@
+"""Real-counter e2e: RAPL / hwmon -> attribute_live on THIS host.
+
+These tests exercise the real ``/sys/class/powercap`` and
+``/sys/class/hwmon`` adapters end to end — discovery, prioritized
+reads, the async pump, and the full streaming attribution chain — and
+skip cleanly on hosts (most CI runners, containers) where the kernel
+exposes no readable counter.  The CI ``real-sensors`` job runs them
+after best-effort ``chmod a+r`` on the powercap tree.
+"""
+import glob
+
+import numpy as np
+import pytest
+
+
+def _readable(pattern):
+    for p in glob.glob(pattern):
+        try:
+            with open(p) as f:
+                f.read()
+            return True
+        except OSError:
+            continue
+    return False
+
+
+HAVE_RAPL = _readable("/sys/class/powercap/*/energy_uj")
+HAVE_HWMON = (_readable("/sys/class/hwmon/hwmon*/energy*_input")
+              or _readable("/sys/class/hwmon/hwmon*/power*_input"))
+
+pytestmark = pytest.mark.skipif(
+    not (HAVE_RAPL or HAVE_HWMON),
+    reason="no readable /sys powercap or hwmon counters on this host")
+
+
+def _backends():
+    from repro.ingest import discover_backends
+    return discover_backends(include=["rapl", "hwmon"])
+
+
+def test_real_backends_declare_counter_semantics():
+    backends = _backends()
+    if not backends:
+        pytest.skip("powercap/hwmon present but discovered no metric")
+    for b in backends:
+        for sp in b.discover():
+            r = b.read(sp.metric)
+            assert np.isfinite(r.value) and r.value >= 0.0
+            if sp.is_cumulative:
+                # the invariant: the KERNEL-declared wrap range rides
+                # on the spec — nothing downstream infers it
+                assert sp.wrap_range_j > 0.0, sp.metric
+
+
+def test_real_counters_attribute_nonzero_energy():
+    """Half a second of live capture on a running host must attribute
+    strictly positive energy from at least one cumulative counter."""
+    from repro.ingest import attribute_live
+    backends = _backends()
+    if not backends:
+        pytest.skip("powercap/hwmon present but discovered no metric")
+    res = attribute_live(duration_s=0.5, backends=backends, chunk=8,
+                         interval_s=0.02, grid_step=0.005, window=32,
+                         hop=16, max_lag=4, tail=16)
+    assert res.totals.shape == (len(res.groups), 1)
+    assert np.all(np.isfinite(res.totals))
+    cumulative = [res.ingest.spec(m).is_cumulative
+                  for m in res.metrics]
+    if any(cumulative):
+        assert float(res.totals.sum()) > 0.0, res.energies()
+    else:                               # power-only hosts: >= 0 joules
+        assert float(res.totals.sum()) >= 0.0
+    # provenance rode along: pump flushed and no reader starved
+    assert res.pump.n_chunks >= 1
+    assert sum(r.n_unavailable for r in res.readers) == 0

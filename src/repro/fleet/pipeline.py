@@ -298,6 +298,7 @@ class IngestStage:
         self.dq_policy = dq_policy
         self.carry: IngestCarry = None
         self._t_first = None
+        self._unseeded = None      # (F,) bool: rows with no valid sample yet
         self.dq_late = None        # (F,) int64 cumulative repair counts
         self.dq_masked = None
         self.dq_last: dict = {}    # this window's per-row counts
@@ -305,6 +306,7 @@ class IngestStage:
     def reset(self):
         self.carry = None
         self._t_first = None
+        self._unseeded = None
         self.dq_late = None
         self.dq_masked = None
         self.dq_last = {}
@@ -341,15 +343,23 @@ class IngestStage:
         first = self.carry is None
         if first:
             # zero-width seed at the first VALID sample — seeding from a
-            # masked slot would turn its garbage timestamp into an edge
+            # masked slot would turn its garbage timestamp into an edge.
+            # Rows with NO valid sample yet stay unseeded: their carry
+            # holds the placeholder slot (every emitted edge zero-width,
+            # zero energy) and the real seed is deferred to the first
+            # chunk that delivers a valid sample for the row.
             if valid is None:
-                seed_t, seed_v = t[:, :1], v[:, :1]
+                fi = np.zeros((t.shape[0], 1), np.intp)
+                self._unseeded = np.zeros((t.shape[0],), bool)
             else:
-                fi = np.argmax(np.asarray(valid, bool), axis=1)[:, None]
-                seed_t = np.take_along_axis(t, fi, axis=1)
-                seed_v = np.take_along_axis(v, fi, axis=1)
+                vb = np.asarray(valid, bool)
+                fi = np.argmax(vb, axis=1)[:, None]
+                self._unseeded = ~vb.any(axis=1)
+            seed_t = np.take_along_axis(t, fi, axis=1)
+            seed_v = np.take_along_axis(v, fi, axis=1)
             self.carry = IngestCarry(t=seed_t, v=seed_v)
-            seed64 = seed_t[:, 0].astype(np.float64)
+            seed64 = np.where(self._unseeded, np.inf,
+                              seed_t[:, 0].astype(np.float64))
             if self.mode == "maskfill":
                 # power rows: the first valid sample opens the span
                 self._t_first = seed64
@@ -359,6 +369,32 @@ class IngestStage:
                 # counters wait for the first closing edge; power rows
                 # open at the seed (the later minimum() never undercuts)
                 self._t_first = np.where(self.kind_row, np.inf, seed64)
+        elif self._unseeded is not None and self._unseeded.any():
+            # deferred seeding: a row dark through every previous chunk
+            # seeds zero-width at its first valid sample NOW, so the
+            # interval from the placeholder to the first real sample
+            # carries no fabricated counter delta
+            vb = None if valid is None else np.asarray(valid, bool)
+            has = np.ones((t.shape[0],), bool) if vb is None \
+                else vb.any(axis=1)
+            reseed = self._unseeded & has
+            if reseed.any():
+                fi = (np.zeros((t.shape[0], 1), np.intp) if vb is None
+                      else np.argmax(vb, axis=1)[:, None])
+                st = np.take_along_axis(t, fi, axis=1)
+                sv = np.take_along_axis(v, fi, axis=1)
+                r = reseed[:, None]
+                self.carry = IngestCarry(
+                    t=np.where(r, st, self.carry.t),
+                    v=np.where(r, sv, self.carry.v))
+                st64 = st[:, 0].astype(np.float64)
+                if self.mode == "maskfill":
+                    self._t_first = np.where(reseed, st64, self._t_first)
+                elif self.kind_row is not None:
+                    self._t_first = np.where(
+                        reseed & ~self.kind_row,
+                        np.minimum(self._t_first, st64), self._t_first)
+                self._unseeded = self._unseeded & ~reseed
         if self.mode == "sanitize":
             t_eff, v_eff, dq = sanitize_chunk(t, v, valid,
                                               self.carry.t, self.carry.v,

@@ -10,14 +10,22 @@ with ``poll(now) -> (t, v)`` + ``drained``.
 Two production fixes over the example version:
 
   * duplicate publications are DEDUPED at the ingest boundary: a
-    sample whose timestamp does not strictly advance its row is
-    dropped and counted (``n_dupes``) — under coarse sensor clocks the
+    sample whose timestamp equals its row's running max is dropped
+    and counted (``n_dupes``) — under coarse sensor clocks the
     busy-poll otherwise re-delivers the same publication every
-    interval, and only genuine reorders should reach the pipeline's
-    ``late``/``reordered`` dq counters;
+    interval — while strictly-decreasing timestamps (genuine
+    reorders) pass through to the pipeline's ``late``/``reordered``
+    dq counters;
   * the poll loop jitters its sleep (``jitter`` fraction of
     ``interval_s``) so a fleet of ingest threads does not phase-lock
     onto the sensor refresh clock (the aliasing failure mode of §V-A).
+
+Rows that have not yet produced a single sample (a metric whose every
+provider is failing — the degraded world ``PrioritizedIngest`` exists
+for) never block the fleet: flushes proceed on the live rows' cadence
+and the dark row's columns go out as MASKED zero-width placeholders,
+so the stage defers that row's seed until its first real sample and a
+dead metric costs exactly zero energy instead of the whole capture.
 """
 from __future__ import annotations
 
@@ -66,13 +74,16 @@ class AsyncFleetIngest:
     (zero-width intervals — exactly zero energy, the packing
     subsystem's convention), which also keeps every row's wall-clock
     span aligned — the contract the streaming regrid frontier relies
-    on.  ``stop()`` drains the buffers and joins the thread.
+    on.  Rows with no samples at all yet flush as masked zero-width
+    placeholders (see the module docstring).  ``stop()`` drains the
+    buffers and joins the thread.
     """
 
     def __init__(self, readers, stream, t0: float,
                  chunk: int = DEFAULT_CHUNK, interval_s: float = 2e-3,
                  jitter: float = 0.25, seed: int = 0):
-        self._readers = readers
+        self._readers = list(readers)
+        assert self._readers, "AsyncFleetIngest needs >= 1 reader"
         self._stream = stream
         self._t0 = t0
         self._chunk = chunk
@@ -100,8 +111,10 @@ class AsyncFleetIngest:
     def _run(self):
         while not self._stop.is_set():
             self._poll_once()
-            if max(len(b[0]) for b in self._buf) >= self._chunk \
-                    and all(self._last):
+            # flush on the live rows' cadence — a row with no samples
+            # yet must not stall the fleet (its buffers stay empty and
+            # its columns flush as masked placeholders)
+            if max(len(b[0]) for b in self._buf) >= self._chunk:
                 self._flush()
             if all(r.drained for r in self._readers):
                 break
@@ -119,13 +132,14 @@ class AsyncFleetIngest:
             tm, val = r.poll(now)
             if len(tm) == 0:
                 continue
-            # ingest-boundary dedupe: only strictly-advancing
-            # timestamps enter the buffers.  Within the poll batch a
-            # running max keeps the FIRST sample of each republished
-            # timestamp; across polls the row frontier drops the
-            # re-delivered publications a coarse clock produces.
-            # Decreasing timestamps (genuine reorders) pass through —
-            # the pipeline's sanitize/dq accounting owns those.
+            # ingest-boundary dedupe: a sample equal to its row's
+            # running max is a republication and is dropped.  Within
+            # the poll batch the running max keeps the FIRST sample of
+            # each republished timestamp; across polls the row
+            # frontier drops the re-deliveries a coarse clock
+            # produces.  Decreasing timestamps (genuine reorders) pass
+            # through — the pipeline's sanitize/dq accounting owns
+            # those.
             tm = np.asarray(tm, np.float64)
             val = np.asarray(val)
             prev = np.concatenate(([self._last_t[i]], tm[:-1]))
@@ -147,21 +161,33 @@ class AsyncFleetIngest:
         f = len(self._readers)
         t_blk = np.zeros((f, self._chunk), np.float64)
         e_blk = np.zeros((f, self._chunk), np.float64)
+        valid = np.ones((f, self._chunk), bool)
         for i, (ts, es) in enumerate(self._buf):
             k = min(len(ts), self._chunk)
             t_blk[i, :k] = ts[:k]
             e_blk[i, :k] = es[:k]
             del ts[:k], es[:k]
             if k < self._chunk:              # replicate-last padding
-                # k == 0 (row had no new samples) falls back on the
-                # carried last sample — _run only flushes once every
-                # row has one, so _last[i] is always set here
-                lt, le = (t_blk[i, k - 1], e_blk[i, k - 1]) if k \
-                    else self._last[i]
+                if k:
+                    lt, le = t_blk[i, k - 1], e_blk[i, k - 1]
+                elif self._last[i] is not None:
+                    # no new samples this flush: hold the carried last
+                    lt, le = self._last[i]
+                else:
+                    # row has never sampled: zero-width placeholders
+                    # at t0, MASKED so the ingest stage defers the
+                    # row's seed to its first real sample (no
+                    # fabricated counter delta when it comes alive)
+                    # and its dq `masked` counter records the gap
+                    lt, le = 0.0, 0.0
+                    valid[i] = False
                 t_blk[i, k:] = lt
                 e_blk[i, k:] = le
-        self._stream.update(t_blk.astype(np.float32),
-                            e_blk.astype(np.float32))
+        t32, e32 = t_blk.astype(np.float32), e_blk.astype(np.float32)
+        if valid.all():
+            self._stream.update(t32, e32)
+        else:
+            self._stream.update(t32, e32, valid)
         self.n_chunks += 1
 
     def stop(self):

@@ -222,9 +222,10 @@ class BackendReader:
     poll protocol (``poll(now) -> (t, v) arrays``, ``drained``).
 
     Each poll performs one prioritized read; duplicate publications
-    (same ``t_measured`` as the previous poll — coarse sensor clocks,
-    cached reads) are dropped HERE, at the ingest boundary, so the
-    pipeline's dq counters see real reorders only.  ``duration_s``
+    (same ``t_measured`` as the previously forwarded sample — coarse
+    sensor clocks, cached reads) are dropped HERE, at the ingest
+    boundary, while strictly-decreasing timestamps (genuine reorders)
+    pass through to the pipeline's dq counters.  ``duration_s``
     bounds the live capture (None = until ``stop()``).
     """
 
@@ -235,7 +236,8 @@ class BackendReader:
         self.duration_s = duration_s
         self._t_stop = t_stop
         self._t_start = None
-        self._last_tm = -np.inf
+        self._prev_tm = np.nan     # last forwarded t_measured (dedupe)
+        self._last_tm = -np.inf    # max forwarded (t_stop frontier)
         self._stopped = False
         self.n_dupes = 0
         self.n_unavailable = 0
@@ -254,10 +256,11 @@ class BackendReader:
         except IngestUnavailable:
             self.n_unavailable += 1
             return empty
-        if r.t_measured <= self._last_tm:
+        if r.t_measured == self._prev_tm:
             self.n_dupes += 1          # duplicate publication: dedupe
             return empty
-        self._last_tm = r.t_measured
+        self._prev_tm = r.t_measured
+        self._last_tm = max(self._last_tm, r.t_measured)
         return (np.asarray([r.t_measured], np.float64),
                 np.asarray([r.value], np.float64))
 

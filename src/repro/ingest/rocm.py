@@ -125,6 +125,13 @@ class RocmSmiBackend(_SmiBackend):
     _POWER_KEYS = ("Average Graphics Package Power (W)",
                    "Current Socket Graphics Package Power (W)")
 
+    def __init__(self, **kwargs):
+        super().__init__(**kwargs)
+        # metric -> rocm-smi card key, recorded at discovery: the tool
+        # may report non-contiguous cards (card0, card2), so the gpu{i}
+        # enumeration index cannot be mapped back to a card name
+        self._card_for = {}
+
     @staticmethod
     def _cards(doc):
         return sorted((k for k in doc if k.startswith("card")),
@@ -141,30 +148,42 @@ class RocmSmiBackend(_SmiBackend):
 
     def _discover(self):
         doc = self._json("--showenergycounter", "--json")
-        specs = []
-        for i, card in enumerate(self._cards(doc)):
-            res = self._resolution_j(doc[card])
-            specs.append(MetricSpec(
-                f"gpu{i}.energy", "energy_cum",
-                wrap_range_j=(2.0 ** ACCUMULATOR_BITS) * res,
-                resolution_j=res, update_interval_s=1e-3,
-                source=self.name))
         try:
             pdoc = self._json("--showpower", "--json")
         except BackendError:
             pdoc = {}
-        for i, card in enumerate(self._cards(pdoc)):
+        # one card -> gpu index map across both documents: card keys
+        # may be non-contiguous (card0, card2), so gpu{i} is the rank
+        # in card order, remembered per metric for read()
+        gpu_of = {card: i
+                  for i, card in enumerate(self._cards({**pdoc, **doc}))}
+        specs = []
+        card_for = {}
+        for card in self._cards(doc):
+            res = self._resolution_j(doc[card])
+            metric = f"gpu{gpu_of[card]}.energy"
+            card_for[metric] = card
+            specs.append(MetricSpec(
+                metric, "energy_cum",
+                wrap_range_j=(2.0 ** ACCUMULATOR_BITS) * res,
+                resolution_j=res, update_interval_s=1e-3,
+                source=self.name))
+        for card in self._cards(pdoc):
             if any(k in pdoc[card] for k in self._POWER_KEYS):
+                metric = f"gpu{gpu_of[card]}.power"
+                card_for[metric] = card
                 specs.append(MetricSpec(
-                    f"gpu{i}.power", "power_inst",
+                    metric, "power_inst",
                     update_interval_s=1e-3, source=self.name))
+        self._card_for = card_for
         return specs
 
     def read(self, metric: str) -> Reading:
-        dev, _, kind = metric.partition(".")
-        if not dev.startswith("gpu"):
+        _, _, kind = metric.partition(".")
+        self.discover()
+        card = self._card_for.get(metric)
+        if card is None:
             raise BackendError(f"{self.name}: unknown metric {metric!r}")
-        card = f"card{dev[3:]}"
         if kind == "energy":
             doc = self._json("--showenergycounter", "--json")
             t = self._clock()

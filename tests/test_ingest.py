@@ -506,11 +506,100 @@ def test_async_ingest_dedupes_duplicate_timestamps():
 
 def test_async_ingest_jitter_dephases_poll_clock():
     with pytest.raises(AssertionError):
-        AsyncFleetIngest([], _CapStream(), t0=0.0, jitter=1.5)
+        AsyncFleetIngest([_ListReader([])], _CapStream(), t0=0.0,
+                         jitter=1.5)
     rng = np.random.default_rng(0)
     waits = 1e-3 * (1.0 + 0.25 * rng.uniform(-1.0, 1.0, 100))
     assert np.std(waits) > 0.0          # the de-phasing is real
     assert np.all(waits > 0.0)
+
+
+def test_async_ingest_requires_readers():
+    with pytest.raises(AssertionError):
+        AsyncFleetIngest([], _CapStream(), t0=0.0)
+
+
+def test_backend_reader_forwards_reordered_timestamps():
+    """Only duplicate publications are deduped at the reader boundary;
+    strictly-decreasing timestamps (genuine reorders) pass through to
+    the pipeline's dq accounting."""
+    clk = _Clock()
+    a = _FakeBackend("a", clock=clk)
+    ing = PrioritizedIngest([a], clock=clk)
+    rd = BackendReader(ing, "m")
+    t, _ = rd.poll(clk())
+    assert len(t) == 1
+    clk.tick(-0.2)                      # tool clock stepped backwards
+    t, _ = rd.poll(clk())
+    assert len(t) == 1 and rd.n_dupes == 0    # reorder: forwarded
+    t, _ = rd.poll(clk())               # same stale stamp re-published
+    assert len(t) == 0 and rd.n_dupes == 1    # duplicate: deduped
+    clk.tick(0.5)
+    t, _ = rd.poll(clk())
+    assert len(t) == 1
+
+
+def test_async_ingest_dead_row_zero_energy_and_safe_drain():
+    """A reader that never produces one sample (every provider failing
+    from the start) must not stall the live rows' flushes or crash the
+    stop() drain — and must cost exactly zero energy, not the capture."""
+    from repro.fleet import FleetStream
+    tt = np.linspace(0.0, 2.0, 9)
+    vv = 10.0 * tt
+    live = _ListReader([(tt[:5], vv[:5]), (tt[5:], vv[5:])])
+    dead = _ListReader([])
+    stream = FleetStream([(0.0, 3.0)], 2, wrap_period=[0.0, 0.0])
+    pump = AsyncFleetIngest([live, dead], stream, t0=0.0, chunk=4)
+    pump._poll_once()
+    # the dead row no longer blocks the periodic flush condition
+    assert max(len(b[0]) for b in pump._buf) >= pump._chunk
+    pump._flush()                       # dead row: masked placeholders
+    pump.stop()                         # drain must not raise
+    assert pump.n_chunks >= 2
+    totals = np.asarray(stream.totals(), np.float64)
+    assert totals[0].sum() == pytest.approx(float(vv[-1] - vv[0]))
+    assert totals[1].sum() == 0.0
+
+
+def test_async_ingest_late_row_seeds_without_fabricated_delta():
+    """A row dark through the first flush seeds at its FIRST real
+    sample when it comes alive: the jump from the masked placeholder
+    to a large counter value carries no fabricated energy."""
+    from repro.fleet import FleetStream
+    tt = np.linspace(0.0, 2.0, 9)
+    vv = 10.0 * tt
+    live = _ListReader([(tt[:5], vv[:5]), (tt[5:], vv[5:])])
+    late = _ListReader([(np.empty((0,)), np.empty((0,))),
+                        ([1.0, 1.5, 2.0], [500.0, 505.0, 510.0])])
+    stream = FleetStream([(0.0, 3.0)], 2, wrap_period=[0.0, 0.0])
+    pump = AsyncFleetIngest([live, late], stream, t0=0.0, chunk=4)
+    pump._poll_once()                   # late row still dark
+    pump._flush()                       # -> masked placeholders
+    pump.stop()                         # late row arrives in the drain
+    totals = np.asarray(stream.totals(), np.float64)
+    assert totals[0].sum() == pytest.approx(float(vv[-1] - vv[0]))
+    # seeded zero-width at 500 J: only the 10 J actually accumulated
+    assert totals[1].sum() == pytest.approx(10.0)
+
+
+def test_rocm_smi_non_contiguous_cards_map_to_discovery():
+    """rocm-smi may report non-contiguous card keys; reads must target
+    the card each metric was DISCOVERED from, with one card->gpu index
+    shared by the energy and power documents."""
+    energy = {"card0": {"Energy counter": "1000000",
+                        "Accumulated Energy (uJ)": "15259000.0"},
+              "card2": {"Energy counter": "2000000",
+                        "Accumulated Energy (uJ)": "30518000.0"}}
+    power = {"card2": {"Average Graphics Package Power (W)": "42.0"}}
+    b = RocmSmiBackend(tool_path="/fake",
+                       runner=_rocm_runner(energy, power))
+    assert {sp.metric for sp in b.discover()} == {
+        "gpu0.energy", "gpu1.energy", "gpu1.power"}
+    # gpu1.* was declared from card2 -> reads card2, not card1
+    assert b.read("gpu1.energy").value == pytest.approx(30.518)
+    assert b.read("gpu1.power").value == pytest.approx(42.0)
+    with pytest.raises(BackendError):
+        b.read("gpu0.power")            # card0 declared no power
 
 
 def test_simulated_smi_reader_shutdown_conservation():
